@@ -1,0 +1,248 @@
+"""One function per paper table/figure.  Each returns a list of
+(name, derived_value, detail) rows; benchmarks.run times them and prints the
+``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+import repro.scheduler.request as request_mod
+from benchmarks import schedules as sched
+from repro.configs.paper_models import gpt3_175b, llama_13b, llama_33b
+from repro.core import quantized_chunk_size
+from repro.scheduler import OrcaScheduler, Request, SarathiScheduler
+from repro.sim import (A100, A6000, TPU_V5E, BatchSpec, DecodeSeg,
+                       PrefillSeg, chunked_prefill_total, decode_time,
+                       iteration_time, prefill_time, simulate_pipeline)
+
+Row = Tuple[str, float, str]
+
+
+def fig3_phase_cost() -> List[Row]:
+    """Fig. 3: per-token prefill vs decode cost across batch sizes
+    (LLaMA-13B, A6000, seq 1024)."""
+    cfg, hw = llama_13b(), A6000
+    rows = []
+    for B in (1, 2, 4, 8, 18):
+        tp = iteration_time(cfg, hw, BatchSpec(
+            prefills=tuple(PrefillSeg(1024) for _ in range(B)))).total
+        td = decode_time(cfg, hw, B, 1024)
+        rows.append((f"fig3/prefill_per_tok_ms/b{B}", tp / (B * 1024) * 1e3,
+                     f"decode_per_tok_ms={td / B * 1e3:.3f}"))
+        rows.append((f"fig3/decode_to_prefill_ratio/b{B}",
+                     (td / B) / (tp / (B * 1024)),
+                     "paper: ~200x at B=1, ~16.7x at B=18"))
+    return rows
+
+
+def table2_decode_maximal() -> List[Row]:
+    """Table 2: prefill-only / decode-only / decode-maximal op times."""
+    cfg, hw = llama_13b(), A6000
+    bd_p = iteration_time(cfg, hw, BatchSpec(prefills=(PrefillSeg(1024),)))
+    bd_d = iteration_time(cfg, hw, BatchSpec(decodes=(DecodeSeg(4, 1024),)))
+    bd_h = iteration_time(cfg, hw, BatchSpec(
+        prefills=(PrefillSeg(1021),), decodes=(DecodeSeg(3, 1024),)))
+    marginal = (bd_h.total - bd_p.total) / 3 * 1e3
+    baseline = bd_d.total / 4 * 1e3
+    return [
+        ("table2/prefill_only_total_ms", bd_p.total * 1e3,
+         "paper=234.8 (linear 224.8, attn 10)"),
+        ("table2/decode_only_total_ms", bd_d.total * 1e3,
+         "paper=49.96 (linear 44.28, attn 5.68)"),
+        ("table2/decode_maximal_total_ms", bd_h.total * 1e3, "paper=238.4"),
+        ("table2/decode_ms_per_tok_baseline", baseline, "paper=12.49"),
+        ("table2/decode_ms_per_tok_piggybacked", marginal, "paper=1.2"),
+        ("table2/piggyback_speedup_x", baseline / marginal, "paper~10x"),
+    ]
+
+
+def fig8_decode_speedup() -> List[Row]:
+    """Fig. 8: decode-only speedup vs batch size / sequence length
+    (chunk 256, LLaMA-13B, A6000)."""
+    cfg, hw = llama_13b(), A6000
+    rows = []
+    for seq, bmax in ((1024, 18), (2048, 10), (3072, 6)):
+        for B in (2, max(2, bmax // 2), bmax):
+            base = decode_time(cfg, hw, B, seq) / B
+            # SARATHI aligns the fused batch to the tile (§4.4):
+            # C = 256 - (B-1), so C + D is a multiple of 128
+            c = quantized_chunk_size(256, B - 1)
+            marg = sched.marginal_decode_cost(
+                cfg, hw, chunk=c, ctx_start=seq // 2, n_dec=B - 1,
+                dec_ctx=seq)
+            rows.append((f"fig8/decode_speedup/seq{seq}_b{B}", base / marg,
+                         "paper range 2.8x-10x"))
+    return rows
+
+
+def table4_peak_gains() -> List[Row]:
+    """Table 4: peak end-to-end throughput gains."""
+    rows = []
+    cases = [
+        (llama_13b(), A6000, 1024, 6, 50, "paper=1.33x"),
+        (llama_13b(), A6000, 2048, 6, 50, "paper=1.26x"),
+        (llama_13b(), A6000, 3072, 6, 50, "paper=1.22x"),
+        (llama_33b(), A100, 1024, 10, 28, "paper=1.25x"),
+        (llama_33b(), A100, 2048, 5, 63, "paper=1.22x"),
+        (llama_33b(), A100, 3072, 3, 127, "paper=1.14x"),
+    ]
+    for cfg, hw, seq, B, pd, note in cases:
+        P = int(seq * pd / (pd + 1))
+        D = max(seq - P, 1)
+        base = sched.baseline_schedule(cfg, hw, P=P, D=D, B=B)
+        c = quantized_chunk_size(256, B - 1)
+        srt = sched.sarathi_schedule(cfg, hw, P=P, D=D, B=B, chunk=c)
+        rows.append((f"table4/e2e_gain/{cfg.name[-9:]}_{hw.name}_seq{seq}",
+                     srt.throughput / base.throughput, note))
+    return rows
+
+
+def fig9_pd_sweep() -> List[Row]:
+    """Fig. 9: normalized throughput vs P:D ratio for chunk sizes."""
+    cfg, hw = llama_13b(), A6000
+    B, seq = 18, 1024
+    rows = []
+    for chunk in (128, 256, 512):
+        best, best_pd = 0.0, None
+        for pd in (2, 5, 10, 14, 20, 28, 50, 100):
+            P = int(seq * pd / (pd + 1))
+            D = max(seq - P, 1)
+            base = sched.baseline_schedule(cfg, hw, P=P, D=D, B=B)
+            srt = sched.sarathi_schedule(
+                cfg, hw, P=P, D=D, B=B,
+                chunk=quantized_chunk_size(chunk, B - 1))
+            g = srt.throughput / base.throughput
+            if g > best:
+                best, best_pd = g, pd
+        rows.append((f"fig9/peak_gain_chunk{chunk}", best,
+                     f"at P:D={best_pd}; paper peak ~1.27x at "
+                     f"P:D~C/(B-1)={chunk / (B - 1):.0f}"))
+    return rows
+
+
+def fig10_op_breakdown() -> List[Row]:
+    """Fig. 10: linear-op runtime reduction under decode-maximal batching."""
+    cfg, hw = llama_13b(), A6000
+    seq, B, chunk = 1024, 18, 256
+    P = seq * 14 // 15
+    D = seq - P
+    spec_f = BatchSpec(prefills=(PrefillSeg(chunk, P // 2),),
+                       decodes=(DecodeSeg(B - 1, seq),), fused=True)
+    spec_s = BatchSpec(prefills=(PrefillSeg(chunk, P // 2),),
+                       decodes=(DecodeSeg(B - 1, seq),), fused=False)
+    f = iteration_time(cfg, hw, spec_f)
+    s = iteration_time(cfg, hw, spec_s)
+    return [
+        ("fig10/ffn_speedup_fused", s.ffn / f.ffn, "paper: 1.3x-1.6x"),
+        ("fig10/preproj_speedup_fused", s.preproj / f.preproj,
+         "paper: 1.05x-1.38x"),
+        ("fig10/attn_unchanged", s.attn / f.attn, "paper: ~1.0"),
+    ]
+
+
+def fig11_orca_comparison() -> List[Row]:
+    """Fig. 11: SARATHI vs best/worst-case Orca (seq 1K, B=18)."""
+    cfg, hw = llama_13b(), A6000
+    B, seq = 18, 1024
+    rows = []
+    for pd in (5, 14, 28, 100):
+        P = int(seq * pd / (pd + 1))
+        D = max(seq - P, 1)
+        base = sched.baseline_schedule(cfg, hw, P=P, D=D, B=B)
+        orca_b = sched.orca_schedule(cfg, hw, P=P, D=D, B=B, best_case=True)
+        s256 = sched.sarathi_schedule(
+            cfg, hw, P=P, D=D, B=B, chunk=quantized_chunk_size(256, B - 1))
+        s512 = sched.sarathi_schedule(
+            cfg, hw, P=P, D=D, B=B, chunk=quantized_chunk_size(512, B - 1))
+        rows.append((f"fig11/orca_best_gain/pd{pd}",
+                     orca_b.throughput / base.throughput,
+                     "paper peak ~1.11x"))
+        rows.append((f"fig11/sarathi256_gain/pd{pd}",
+                     s256.throughput / base.throughput,
+                     "paper peak ~1.27x"))
+        rows.append((f"fig11/sarathi512_gain/pd{pd}",
+                     s512.throughput / base.throughput,
+                     "paper peak ~1.23x"))
+    return rows
+
+
+def fig12_pipeline_bubbles() -> List[Row]:
+    """Fig. 12: GPT-3, 8-way TP x 8-way PP, bubble time + completion."""
+    cfg = gpt3_175b()
+
+    def workload(n=1200, seed=0):
+        rng = np.random.default_rng(seed)
+        out = []
+        for _ in range(n):
+            z = rng.zipf(1.4)
+            plen = int(min(1024 * z, 4096))
+            out.append(Request(prompt=[1] * plen,
+                               max_new_tokens=max(plen // 10, 8)))
+        return out
+
+    results = {}
+    # SARATHI's chunk is tile-aligned WITH its piggybacked decodes (§4.4):
+    # C = 256 - 26 = 230 so the fused matmul M-dim is exactly 256
+    c = quantized_chunk_size(256, 26)
+    for name, cls, chunk in (("orca", OrcaScheduler, 4096),
+                             ("sarathi", SarathiScheduler, c)):
+        request_mod._ids = itertools.count()
+        # paper §5.3: batch 27 per micro-batch, pp=8 micro-batches in
+        # flight (the KV budget is per-stage)
+        s = cls(n_slots=216, max_decodes=26, chunk_size=chunk)
+        for r in workload():
+            s.submit(r)
+        results[name] = simulate_pipeline(cfg, A100, s, pp=8, tp=8)
+    o, sa = results["orca"], results["sarathi"]
+    return [
+        ("fig12/median_bubble_reduction_x",
+         o.median_request_bubble / max(sa.median_request_bubble, 1e-9),
+         "paper=6.29x"),
+        ("fig12/e2e_speedup_x", o.makespan / sa.makespan,
+         "paper=1.91x; magnitude depends on in-flight batch accounting, "
+         "see EXPERIMENTS.md"),
+        ("fig12/sarathi_bubble_frac",
+         sa.total_bubble / (sa.makespan * 8), "lower is better"),
+        ("fig12/orca_bubble_frac",
+         o.total_bubble / (o.makespan * 8), ""),
+    ]
+
+
+def fig13_chunk_ablation() -> List[Row]:
+    """Fig. 13: chunked-prefill overhead vs chunk size (prefill-only)."""
+    cfg, hw = llama_13b(), A6000
+    P = 1024
+    base = prefill_time(cfg, hw, P)
+    rows = []
+    for chunk in (64, 128, 256, 512):
+        t = chunked_prefill_total(cfg, hw, P, chunk)
+        rows.append((f"fig13/prefill_overhead_chunk{chunk}", t / base,
+                     "paper: ~5x @64, <=1.2x @256, <=1.1x @512"))
+    # tile-quantization effect (Fig. 7): 256 vs 320 chunk
+    t256 = chunked_prefill_total(cfg, hw, P, 256)
+    t320 = chunked_prefill_total(cfg, hw, P, 320)
+    rows.append(("fig13/tile_quantization_320_vs_256", t320 / t256,
+                 ">1 means misaligned chunk is slower (Fig. 7)"))
+    return rows
+
+
+def chunk_size_selection() -> List[Row]:
+    """§4.4 on the TPU target: MXU-aligned chunk choice for v5e."""
+    cfg = llama_13b()
+    rows = []
+    for B in (8, 18):
+        c = quantized_chunk_size(256, B - 1)
+        rows.append((f"chunksize/v5e_aligned_b{B}", c,
+                     f"(C+{B - 1}) % 128 == 0"))
+    return rows
+
+
+ALL_TABLES = [
+    fig3_phase_cost, table2_decode_maximal, fig8_decode_speedup,
+    table4_peak_gains, fig9_pd_sweep, fig10_op_breakdown,
+    fig11_orca_comparison, fig12_pipeline_bubbles, fig13_chunk_ablation,
+    chunk_size_selection,
+]

@@ -1,0 +1,107 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape) from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+Sources: compiled.cost_analysis() for FLOPs/bytes; HLO-text parse for
+collective bytes (see repro.launch.dryrun.collective_bytes).  Two
+corrections applied and recorded:
+
+* XLA reports cost_analysis for the whole partitioned module divided across
+  devices already (CPU SPMD) — we treat the reported numbers as per-device.
+* lax.scan bodies are counted ONCE by cost_analysis; the dry-run therefore
+  compiles analysis artifacts with REPRO_SCAN_UNROLL=1 where feasible, and
+  otherwise we scale the scan-body dominated terms by the trip count
+  (recorded in the 'correction' column).
+
+MODEL_FLOPS = 6·N·D (training) / 2·N·D (inference fwd) with N = active
+params; the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.launch.shardings import INPUT_SHAPES
+from repro.models.stack import group_split
+from repro.sim.hardware import TPU_V5E
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: str, variant: str = "") -> float:
+    """Analytical useful FLOPs for the workload (per step, all chips)."""
+    cfg = get_config(arch, variant=variant)
+    info = INPUT_SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if info["kind"] == "train":
+        tokens = info["seq_len"] * info["global_batch"]
+        return 6.0 * n_active * tokens
+    if info["kind"] == "prefill":
+        tokens = info["seq_len"] * info["global_batch"]
+        return 2.0 * n_active * tokens
+    tokens = info["global_batch"]                 # decode: one token/seq
+    return 2.0 * n_active * tokens
+
+
+def scan_correction(arch: str, shape: str, variant: str = "") -> float:
+    """Trip-count factor when the artifact was compiled with the layer scan
+    rolled (cost_analysis counts the body once)."""
+    cfg = get_config(arch, variant=variant)
+    _, n_groups, _ = group_split(cfg)
+    return float(max(n_groups, 1))
+
+
+def roofline_row(rep: Dict, *, corrected: bool = True) -> Optional[Dict]:
+    if rep.get("status") != "ok":
+        return None
+    hw = TPU_V5E
+    chips = CHIPS[rep["mesh"]]
+    corr = 1.0
+    if corrected and not rep.get("unrolled", False):
+        corr = scan_correction(rep["arch"], rep["shape"],
+                               rep.get("variant", ""))
+    flops = rep["flops"] * corr
+    byts = rep["bytes_accessed"] * corr
+    coll = sum(rep["collective_bytes"].values())   # outside-scan collectives
+    t_compute = flops / hw.peak_flops
+    t_memory = byts / hw.hbm_bw
+    t_coll = coll / hw.link_bw
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    mf = model_flops(rep["arch"], rep["shape"], rep.get("variant", ""))
+    mf_per_chip = mf / chips
+    return {
+        "arch": rep["arch"], "shape": rep["shape"], "mesh": rep["mesh"],
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": mf_per_chip / flops if flops else 0.0,
+        "scan_correction": corr,
+    }
+
+
+def load_and_summarise(json_path: str) -> List[Dict]:
+    reps = json.loads(pathlib.Path(json_path).read_text())
+    rows = []
+    for r in reps:
+        row = roofline_row(r)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def rows_to_csv(rows: List[Dict]) -> List[str]:
+    out = []
+    for r in rows:
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}@{r['mesh']},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.1f},"
+            f"dom={r['dominant']};c={r['compute_s'] * 1e3:.3f}ms;"
+            f"m={r['memory_s'] * 1e3:.3f}ms;x={r['collective_s'] * 1e3:.3f}ms;"
+            f"useful={r['useful_flops_ratio']:.2f}")
+    return out

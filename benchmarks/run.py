@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints the
+``name,us_per_call,derived`` CSV covering:
+
+* Fig. 3 / Table 2 / Fig. 8 / Table 4 / Fig. 9 / Fig. 10 / Fig. 11 /
+  Fig. 12 / Fig. 13 — the paper's artifacts, reproduced with the
+  calibrated analytical cost model (§5.3 methodology) and the pipeline
+  simulator;
+* real CPU wall-clock of decode-maximal batching on a reduced model;
+* the roofline table from the dry-run artifacts (if present).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import paper_tables, wallclock
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL_TABLES:
+        t0 = time.perf_counter()
+        rows = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for name, value, note in rows:
+            print(f"{name},{dt_us:.1f},{value:.4g} [{note}]")
+
+    for bench in (wallclock.hybrid_vs_separate,
+                  wallclock.linear_op_weight_reuse):
+        t0 = time.perf_counter()
+        rows = bench()
+        dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for name, value, note in rows:
+            print(f"{name},{dt_us:.1f},{value:.4g} [{note}]")
+
+    # roofline (needs the dry-run artifacts)
+    import pathlib
+    from benchmarks import roofline
+    for path in sorted(pathlib.Path("experiments").glob("dryrun*.json")):
+        try:
+            t0 = time.perf_counter()
+            rows = roofline.load_and_summarise(str(path))
+            dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+            for line in roofline.rows_to_csv(rows):
+                print(line)
+        except Exception as e:                    # pragma: no cover
+            print(f"roofline/{path.name},0,SKIPPED [{e}]", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

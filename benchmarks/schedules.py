@@ -1,0 +1,113 @@
+"""Shared schedule evaluators for the paper-reproduction benchmarks.
+
+Models the steady-state serving schedules of §5.1/§5.2 with the analytical
+cost model: a batch of B identical requests (P prompt tokens, D decode
+tokens each) executed under each policy.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.sim import (BatchSpec, DecodeSeg, PrefillSeg, decode_time,
+                       hybrid_time, iteration_time, prefill_time)
+from repro.sim.hardware import Hardware
+
+
+@dataclass(frozen=True)
+class ScheduleResult:
+    total_time: float
+    prefill_time: float
+    decode_time: float
+    n_tokens: int
+
+    @property
+    def throughput(self) -> float:          # tokens / second
+        return self.n_tokens / self.total_time
+
+
+def baseline_schedule(cfg: ModelConfig, hw: Hardware, *, P: int, D: int,
+                      B: int, n_chips: int = 1) -> ScheduleResult:
+    """FasterTransformer-style: one prefill-only batch, then D decode-only
+    iterations (paper §5.1 baseline)."""
+    t_pref = iteration_time(
+        cfg, hw, BatchSpec(prefills=tuple(PrefillSeg(P) for _ in range(B))),
+        n_chips).total
+    t_dec = 0.0
+    for d in range(D):
+        t_dec += decode_time(cfg, hw, B, P + d, n_chips)
+    n = B * (P + D)
+    return ScheduleResult(t_pref + t_dec, t_pref, t_dec, n)
+
+
+def sarathi_schedule(cfg: ModelConfig, hw: Hardware, *, P: int, D: int,
+                     B: int, chunk: int, n_chips: int = 1) -> ScheduleResult:
+    """Decode-maximal batching: every chunk iteration carries B-1 decodes;
+    decode surplus (or deficit) handled as decode-only (or chunk-only)
+    iterations (paper §4.3/§5.1)."""
+    n_chunks_per_req = math.ceil(P / chunk)
+    total_chunks = B * n_chunks_per_req
+    piggyback_capacity = total_chunks * (B - 1)
+    total_decodes = B * D
+    t = 0.0
+    t_pref_equiv = 0.0
+    # hybrid iterations
+    avg_ctx_start = P / 2
+    avg_dec_ctx = P + D / 2
+    n_pig = min(total_decodes, piggyback_capacity)
+    d_per_chunk = n_pig / total_chunks
+    for i in range(total_chunks):
+        c_start = (i % n_chunks_per_req) * chunk
+        c_len = min(chunk, P - c_start)
+        nd = min(B - 1, int(round(d_per_chunk)))
+        t += hybrid_time(cfg, hw, c_len, c_start, nd, int(avg_dec_ctx),
+                         n_chips)
+    t_pref_equiv = t
+    # leftover decode-only iterations
+    leftover = total_decodes - n_pig
+    t_dec = 0.0
+    if leftover > 0:
+        iters = math.ceil(leftover / B)
+        for _ in range(iters):
+            t_dec += decode_time(cfg, hw, B, int(avg_dec_ctx), n_chips)
+    n = B * (P + D)
+    return ScheduleResult(t + t_dec, t_pref_equiv, t_dec, n)
+
+
+def orca_schedule(cfg: ModelConfig, hw: Hardware, *, P: int, D: int,
+                  B: int, best_case: bool = True,
+                  n_chips: int = 1) -> ScheduleResult:
+    """Best-case Orca (§5.2): each request's FULL prefill overlaps B-1
+    running decodes; leftover decodes run decode-only.  Worst case degrades
+    to the baseline."""
+    if not best_case:
+        return baseline_schedule(cfg, hw, P=P, D=D, B=B, n_chips=n_chips)
+    total_decodes = B * D
+    piggyback_capacity = B * (B - 1)          # one hybrid iter per request
+    avg_dec_ctx = P + D / 2
+    t = 0.0
+    for _ in range(B):
+        nd = min(B - 1, total_decodes // B if B else 0)
+        t += iteration_time(cfg, hw, BatchSpec(
+            prefills=(PrefillSeg(P),),
+            decodes=(DecodeSeg(nd, int(avg_dec_ctx)),) if nd else ()),
+            n_chips).total
+    n_pig = min(total_decodes, piggyback_capacity)
+    leftover = total_decodes - n_pig
+    t_dec = 0.0
+    if leftover > 0:
+        for _ in range(math.ceil(leftover / B)):
+            t_dec += decode_time(cfg, hw, B, int(avg_dec_ctx), n_chips)
+    n = B * (P + D)
+    return ScheduleResult(t + t_dec, t, t_dec, n)
+
+
+def marginal_decode_cost(cfg: ModelConfig, hw: Hardware, *, chunk: int,
+                         ctx_start: int, n_dec: int, dec_ctx: int,
+                         n_chips: int = 1) -> float:
+    """Per-token cost of piggybacked decodes (paper §5.1.1 methodology:
+    hybrid-iteration time minus prefill-only-chunk time, over n_dec)."""
+    t_h = hybrid_time(cfg, hw, chunk, ctx_start, n_dec, dec_ctx, n_chips)
+    t_p = prefill_time(cfg, hw, chunk, ctx_start, n_chips)
+    return (t_h - t_p) / n_dec

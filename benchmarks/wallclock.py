@@ -1,0 +1,95 @@
+"""Real wall-clock micro-benchmarks on THIS host (CPU): decode-maximal
+batching vs separate prefill/decode execution.
+
+The weight-reuse effect is ISA-independent: fusing decode tokens into the
+chunk's matmuls amortizes the weight traffic, so the marginal decode cost
+collapses — the same mechanism the paper measures on GPU (Table 2, 10x on
+A6000).  A 1-core CPU has a far lower compute:bandwidth ratio than an
+A6000, so the expected effect here is ~2-3x, which is what we observe; the
+calibrated cost model + roofline carry the full-scale claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED
+from repro.models import build_model, make_packed
+
+
+def hybrid_vs_separate(chunk: int = 128, n_dec: int = 32) -> List[Tuple]:
+    """Full-engine hybrid step vs chunk-only + decode-only steps (cache
+    donated, as the production engine runs)."""
+    cfg = dataclasses.replace(
+        ASSIGNED["tinyllama-1.1b"]().reduced(), n_layers=2, d_model=1024,
+        d_ff=4096, n_heads=8, n_kv_heads=2, head_dim=128, vocab_size=4096)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    S = 1024
+    rng = np.random.default_rng(0)
+    ct = jnp.asarray(rng.integers(0, cfg.vocab_size, chunk), jnp.int32)
+    dt = jnp.asarray(rng.integers(0, cfg.vocab_size, n_dec), jnp.int32)
+    slots = jnp.arange(1, n_dec + 1, dtype=jnp.int32)
+    ctx = jnp.full((n_dec,), S - 2, jnp.int32)
+    pk_h = make_packed(chunk_tokens=ct, chunk_slot=0, chunk_start=0,
+                       decode_tokens=dt, decode_slots=slots, decode_ctx=ctx)
+    pk_c = make_packed(chunk_tokens=ct, chunk_slot=0, chunk_start=0)
+    pk_d = make_packed(decode_tokens=dt, decode_slots=slots, decode_ctx=ctx)
+    fwd = jax.jit(lambda pk, c: model.forward_packed(params, pk, c),
+                  donate_argnums=(1,))
+
+    def t(pk, iters=4):
+        cache = model.init_cache(rows=n_dec + 1, max_len=S)
+        *_, cache, _ = fwd(pk, cache)
+        jax.block_until_ready(cache)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            *_, cache, _ = fwd(pk, cache)
+        jax.block_until_ready(cache)
+        return (time.perf_counter() - t0) / iters
+
+    th, tc, td = t(pk_h), t(pk_c), t(pk_d)
+    baseline = td / n_dec
+    marginal = max(th - tc, 1e-9) / n_dec
+    return [
+        ("wallclock/chunk_only_ms", tc * 1e3, f"C={chunk}"),
+        ("wallclock/decode_only_ms_per_tok", baseline * 1e3,
+         f"B={n_dec} decode-only batch"),
+        ("wallclock/piggybacked_ms_per_tok", marginal * 1e3,
+         "marginal cost inside hybrid batch"),
+        ("wallclock/piggyback_speedup_x", baseline / marginal,
+         "CPU analogue of paper Table 2 (10x on A6000; ~2-3x expected on "
+         "1-core CPU)"),
+    ]
+
+
+def linear_op_weight_reuse() -> List[Tuple]:
+    """Isolated linear-operator analogue of Table 2's 'Linear' column:
+    a small decode batch pays the full weight fetch; the same tokens fused
+    into a 256-token chunk pay only their marginal compute."""
+    W = jax.random.normal(jax.random.PRNGKey(1), (4096, 16384), jnp.float32)
+    mm = jax.jit(lambda x: (x @ W).sum())
+
+    def t(m, iters=5):
+        x = jax.random.normal(jax.random.PRNGKey(2), (m, 4096))
+        jax.block_until_ready(mm(x))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            o = mm(x)
+        jax.block_until_ready(o)
+        return (time.perf_counter() - t0) / iters
+
+    t8, t256, t264 = t(8), t(256), t(264)
+    return [
+        ("wallclock/linear_m8_ms", t8 * 1e3, "decode-only weight fetch"),
+        ("wallclock/linear_marginal_8tok_ms", (t264 - t256) * 1e3,
+         "8 decode tokens fused into a 256-token chunk"),
+        ("wallclock/linear_piggyback_speedup_x",
+         (t8 / 8) / max((t264 - t256) / 8, 1e-9),
+         "Table 2 'Linear' column analogue"),
+    ]

@@ -1,0 +1,58 @@
+"""Chunk-size selection for a deployment (paper §4.4 + §5.1.3), using the
+calibrated analytical cost model: sweeps chunk sizes for a given model /
+hardware / P:D ratio and prints the throughput landscape plus the
+tile-aligned recommendation.
+
+    PYTHONPATH=src python examples/chunk_size_tuning.py \
+        [--arch paper-llama-13b] [--hw a6000] [--pd 14] [--batch 18]
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.schedules import baseline_schedule, sarathi_schedule
+from repro.configs import ARCHS
+from repro.core import optimal_pd_ratio, quantized_chunk_size
+from repro.sim.hardware import PROFILES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-llama-13b",
+                    choices=sorted(ARCHS))
+    ap.add_argument("--hw", default="a6000",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--pd", type=float, default=14.0)
+    ap.add_argument("--batch", type=int, default=18)
+    ap.add_argument("--seq", type=int, default=1024)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]()
+    hw = PROFILES[args.hw]
+    B = args.batch
+    P = int(args.seq * args.pd / (args.pd + 1))
+    D = max(args.seq - P, 1)
+    base = baseline_schedule(cfg, hw, P=P, D=D, B=B)
+    print(f"{cfg.name} on {hw.name}: P={P} D={D} B={B} "
+          f"(P:D={args.pd})  baseline {base.throughput:.0f} tok/s")
+
+    best = (0.0, None)
+    for target in (64, 128, 256, 384, 512, 1024):
+        c = quantized_chunk_size(target, B - 1, hw.tile)
+        r = sarathi_schedule(cfg, hw, P=P, D=D, B=B, chunk=c)
+        gain = r.throughput / base.throughput
+        marker = ""
+        if gain > best[0]:
+            best = (gain, c)
+            marker = "  <- best"
+        print(f"  chunk {c:5d} (target {target:4d}): "
+              f"{r.throughput:8.0f} tok/s  gain {gain:5.3f}x{marker}")
+    print(f"recommended chunk: {best[1]} "
+          f"(optimal P:D at this chunk: "
+          f"{optimal_pd_ratio(best[1], B):.1f})")
+
+
+if __name__ == "__main__":
+    main()

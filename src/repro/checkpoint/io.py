@@ -1,0 +1,66 @@
+"""Pytree checkpointing with msgpack (no orbax in this environment).
+
+Arrays are stored as raw little-endian bytes with dtype/shape metadata;
+structure is round-tripped exactly (dicts, lists, tuples, scalars).
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+from typing import Any, Dict, Optional
+
+import msgpack
+import numpy as np
+
+_KIND = "__repro_kind__"
+
+
+def _pack(node):
+    if isinstance(node, dict):
+        return {_KIND: "dict",
+                "items": {k: _pack(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {_KIND: "list" if isinstance(node, list) else "tuple",
+                "items": [_pack(v) for v in node]}
+    arr = np.asarray(node)
+    return {_KIND: "array", "dtype": str(arr.dtype),
+            "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack(node):
+    kind = node[_KIND]
+    if kind == "dict":
+        return {k: _unpack(v) for k, v in node["items"].items()}
+    if kind in ("list", "tuple"):
+        seq = [_unpack(v) for v in node["items"]]
+        return seq if kind == "list" else tuple(seq)
+    arr = np.frombuffer(node["data"], dtype=np.dtype(node["dtype"]))
+    return arr.reshape(node["shape"]).copy()
+
+
+def save_checkpoint(path: str | os.PathLike, tree: Any,
+                    metadata: Optional[Dict] = None):
+    """Atomic write (tmp + rename)."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"tree": _pack(tree), "metadata": metadata or {}}
+    tmp = p.with_suffix(p.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, p)
+
+
+def load_checkpoint(path: str | os.PathLike):
+    """-> (tree, metadata)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    return _unpack(payload["tree"]), payload["metadata"]
+
+
+def latest_checkpoint(directory: str | os.PathLike,
+                      prefix: str = "ckpt_") -> Optional[pathlib.Path]:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    cands = sorted(d.glob(f"{prefix}*.msgpack"))
+    return cands[-1] if cands else None

@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS, ASSIGNED, PAPER, get_config, list_archs
+
+__all__ = ["ModelConfig", "ARCHS", "ASSIGNED", "PAPER", "get_config",
+           "list_archs"]

@@ -1,0 +1,22 @@
+"""Granite-MoE 3B-A800M — 40 experts, top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=49155,
+        n_experts=40,
+        top_k=8,
+        max_seq_len=32768,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )

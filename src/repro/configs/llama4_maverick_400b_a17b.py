@@ -1,0 +1,24 @@
+"""Llama-4 Maverick 400B-A17B — MoE, 128 experts top-1, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E] (assigned pool entry).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        n_experts=128,
+        top_k=1,
+        rope_theta=500_000.0,
+        max_seq_len=1_048_576,
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )

@@ -1,0 +1,24 @@
+"""Llama-3.2-Vision 90B — text decoder with interleaved cross-attention
+image layers; vision encoder is a stub frontend (precomputed patch
+embeddings).  [hf:meta-llama/Llama-3.2-11B-Vision]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        cross_attn_every=5,          # every 5th layer is cross-attention
+        n_frontend_tokens=1601,      # one image tile of patch embeddings
+        rope_theta=500_000.0,
+        max_seq_len=131072,
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+    )

@@ -1,0 +1,26 @@
+"""Mamba2-2.7B — attention-free SSM with SSD (state-space duality).
+[arXiv:2405.21060]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        n_layers=64,
+        d_model=2560,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,                      # attention-free, no separate FFN block
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_expand=2,
+        ssm_headdim=64,
+        ssm_ngroups=1,
+        ssm_conv_width=4,
+        ssm_chunk=128,
+        max_seq_len=1_048_576,
+        source="arXiv:2405.21060",
+    )

@@ -1,0 +1,24 @@
+"""RecurrentGemma-9B — RG-LRU recurrent blocks + local attention, 2:1
+pattern (two recurrent blocks per local-attention block).
+[arXiv:2402.19427]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256000,
+        block_pattern=("rglru", "rglru", "local_attn"),
+        lru_width=4096,
+        local_window=2048,
+        max_seq_len=1_048_576,       # unbounded in principle (state + window)
+        source="arXiv:2402.19427",
+    )

@@ -1,0 +1,60 @@
+"""``--arch <id>`` lookup for every selectable configuration."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    llama4_maverick_400b_a17b,
+    stablelm_12b,
+    llama_3_2_vision_90b,
+    recurrentgemma_9b,
+    granite_8b,
+    granite_moe_3b_a800m,
+    qwen2_0_5b,
+    seamless_m4t_medium,
+    tinyllama_1_1b,
+    mamba2_2_7b,
+    paper_models,
+)
+
+# The ten assigned architectures (public pool), keyed by their --arch ids.
+ASSIGNED: Dict[str, Callable[[], ModelConfig]] = {
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b.config,
+    "stablelm-12b": stablelm_12b.config,
+    "llama-3.2-vision-90b": llama_3_2_vision_90b.config,
+    "recurrentgemma-9b": recurrentgemma_9b.config,
+    "granite-8b": granite_8b.config,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.config,
+    "qwen2-0.5b": qwen2_0_5b.config,
+    "seamless-m4t-medium": seamless_m4t_medium.config,
+    "tinyllama-1.1b": tinyllama_1_1b.config,
+    "mamba2-2.7b": mamba2_2_7b.config,
+}
+
+# The paper's own models (benchmarks / cost-model reproduction).
+PAPER: Dict[str, Callable[[], ModelConfig]] = {
+    "paper-llama-13b": paper_models.llama_13b,
+    "paper-llama-33b": paper_models.llama_33b,
+    "paper-gpt3-175b": paper_models.gpt3_175b,
+}
+
+ARCHS: Dict[str, Callable[[], ModelConfig]] = {**ASSIGNED, **PAPER}
+
+
+def get_config(arch: str, *, variant: str = "") -> ModelConfig:
+    """Resolve an ``--arch`` id (optionally ``--variant swa``)."""
+    key = arch.strip()
+    if key not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    cfg = ARCHS[key]()
+    if variant == "swa":
+        cfg = cfg.with_sliding_window()
+    elif variant:
+        raise ValueError(f"unknown variant {variant!r}")
+    return cfg
+
+
+def list_archs() -> list[str]:
+    return sorted(ASSIGNED)

@@ -1,0 +1,24 @@
+"""SeamlessM4T-medium — encoder-decoder transformer backbone; the speech
+frontend (mel + conformer feature extractor) is a stub providing frame
+embeddings.  [arXiv:2308.11596]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family="encdec",
+        n_layers=12,                 # decoder layers
+        n_encoder_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,               # MHA
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        n_frontend_tokens=1024,      # precomputed audio frame embeddings
+        act="relu",
+        max_seq_len=4096,
+        source="arXiv:2308.11596",
+    )

@@ -1,0 +1,193 @@
+"""The SARATHI inference engine.
+
+Owns the model parameters, the slot-indexed caches, and ONE jit-compiled
+packed step of static shape ``(C, D)`` (C = chunk size, D = decode slots).
+Every kind of engine iteration — pure chunked prefill, pure decode batch, or
+a decode-maximal hybrid — is the same compiled computation:
+
+* an iteration without a prefill chunk sets ``chunk_len = 0`` and points the
+  chunk at a scratch cache row (its writes are harmless and discarded);
+* an iteration with fewer than D decodes pads the decode list with scratch
+  rows;
+* a final partial chunk of a prompt is padded to C with ``chunk_len`` masking
+  (see repro.models.packed.PackedBatch).
+
+This is how the paper's uniform-compute property is realised operationally:
+every iteration is the *same shape* of work, so pipeline micro-batches are
+balanced by construction.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.sampling import SamplingParams, sample
+from repro.models import PackedBatch, build_model
+from repro.models.registry import Model
+
+
+def _reset_slot(cache, slot):
+    """Zero every cache leaf's row ``slot`` (-1 for integer leaves, which are
+    ring-buffer position markers where -1 == empty)."""
+    def wipe(leaf):
+        fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
+        row = jnp.full(leaf.shape[1:], fill, leaf.dtype)
+        return leaf.at[slot].set(row)
+    # group caches have a leading group axis before the slot axis
+    def wipe_grouped(leaf):
+        fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
+        row = jnp.full(leaf.shape[0:1] + leaf.shape[2:], fill, leaf.dtype)
+        return leaf.at[:, slot].set(row)
+    return {
+        "groups": jax.tree.map(wipe_grouped, cache["groups"]),
+        "tail": jax.tree.map(wipe, cache["tail"]),
+    }
+
+
+@dataclass
+class ChunkWork:
+    req_id: int
+    tokens: Sequence[int]       # the chunk's token ids (len <= C)
+    start: int                  # tokens already prefilled
+    is_last: bool               # final chunk -> sample the first output token
+
+
+@dataclass
+class DecodeWork:
+    req_id: int
+    token: int                  # last generated (or last prompt) token
+    ctx: int                    # current context length
+
+
+@dataclass
+class IterationPlan:
+    """One engine iteration, as constructed by a scheduler policy."""
+    chunk: Optional[ChunkWork] = None
+    decodes: List[DecodeWork] = field(default_factory=list)
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return len(self.chunk.tokens) if self.chunk else 0
+
+    @property
+    def n_decode_tokens(self) -> int:
+        return len(self.decodes)
+
+
+class Engine:
+    """Slot-based SARATHI execution engine (single host; the distributed
+    variant lives in repro/launch and shards the same step function)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 max_len: int, chunk_size: int, decode_slots: int,
+                 dtype=jnp.float32,
+                 sampling: SamplingParams = SamplingParams(),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.params = params
+        self.C = int(chunk_size)
+        self.D = int(decode_slots)
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.scratch = n_slots                    # extra scratch row
+        self.cache = self.model.init_cache(n_slots + 1, max_len, dtype)
+        self.sampling = sampling
+        self._key = jax.random.PRNGKey(seed)
+        self._free: List[int] = list(range(n_slots))
+        self._slot_of: Dict[int, int] = {}
+        # cache (arg 2) is donated: the KV/state buffers update in place
+        self._step = jax.jit(self._step_impl, donate_argnums=(2,))
+        self._seed_cross = jax.jit(self.model.seed_cross_kv)
+        self._reset_slot = jax.jit(_reset_slot)
+        self.iterations = 0
+
+    # ----------------------------------------------------------- requests
+    def add_request(self, req_id: int, memory=None) -> int:
+        """Assign a cache slot; seed cross-attention KV if the architecture
+        consumes frontend embeddings (VLM image tiles / audio frames)."""
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop(0)
+        self._slot_of[req_id] = slot
+        # wipe any stale state left by a previous occupant of this slot
+        # (ring-buffer positions, SSM/LRU recurrent state); full-attention
+        # KV rows self-heal under the causal mask but are wiped too.
+        self.cache = self._reset_slot(self.cache, jnp.int32(slot))
+        if memory is not None:
+            if self.cfg.family == "encdec":
+                memory = self.model.encode(self.params, memory[None])[0]
+            self.cache = self._seed_cross(self.params, self.cache,
+                                          memory, slot)
+        elif self.model.needs_memory:
+            raise ValueError(f"{self.cfg.name} requires frontend embeddings")
+        return slot
+
+    def release(self, req_id: int):
+        slot = self._slot_of.pop(req_id)
+        self._free.append(slot)
+
+    def slot(self, req_id: int) -> int:
+        return self._slot_of[req_id]
+
+    # --------------------------------------------------------------- step
+    def _step_impl(self, params, pk: PackedBatch, cache, key):
+        chunk_logits, decode_logits, cache, _ = \
+            self.model.forward_packed(params, pk, cache)
+        kc, kd = jax.random.split(key)
+        chunk_tok = (sample(chunk_logits[0], kc, self.sampling)
+                     if chunk_logits is not None else None)
+        dec_tok = (sample(decode_logits, kd, self.sampling)
+                   if decode_logits is not None else None)
+        return chunk_tok, dec_tok, cache
+
+    def execute(self, plan: IterationPlan) -> Dict[int, int]:
+        """Run one iteration; returns {req_id: newly sampled token} for the
+        requests that produced a token this iteration."""
+        if len(plan.decodes) > self.D:
+            raise ValueError(f"plan has {len(plan.decodes)} decodes > D={self.D}")
+        if plan.chunk and len(plan.chunk.tokens) > self.C:
+            raise ValueError("chunk longer than engine chunk size")
+
+        ct = np.zeros((self.C,), np.int32)
+        if plan.chunk:
+            ct[:len(plan.chunk.tokens)] = plan.chunk.tokens
+            c_slot = self._slot_of[plan.chunk.req_id]
+            c_start = plan.chunk.start
+            c_len = len(plan.chunk.tokens)
+        else:
+            c_slot, c_start, c_len = self.scratch, 0, 0
+
+        dt = np.zeros((self.D,), np.int32)
+        ds = np.full((self.D,), self.scratch, np.int32)
+        dc = np.zeros((self.D,), np.int32)
+        for i, w in enumerate(plan.decodes):
+            dt[i] = w.token
+            ds[i] = self._slot_of[w.req_id]
+            dc[i] = w.ctx
+
+        pk = PackedBatch(
+            chunk_tokens=jnp.asarray(ct), chunk_slot=jnp.int32(c_slot),
+            chunk_start=jnp.int32(c_start), chunk_len=jnp.int32(c_len),
+            decode_tokens=jnp.asarray(dt), decode_slots=jnp.asarray(ds),
+            decode_ctx=jnp.asarray(dc))
+
+        self._key, sub = jax.random.split(self._key)
+        chunk_tok, dec_tok, self.cache = self._step(
+            self.params, pk, self.cache, sub)
+        self.iterations += 1
+
+        out: Dict[int, int] = {}
+        if plan.chunk and plan.chunk.is_last and chunk_tok is not None:
+            out[plan.chunk.req_id] = int(chunk_tok)
+        if dec_tok is not None:
+            dec_tok = np.asarray(dec_tok)
+            for i, w in enumerate(plan.decodes):
+                out[w.req_id] = int(dec_tok[i])
+        return out

@@ -1,0 +1,25 @@
+"""Token sampling."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0       # 0 -> greedy
+    top_k: int = 0                 # 0 -> full distribution
+
+
+def sample(logits, key, params: SamplingParams = SamplingParams()):
+    """logits [..., V] -> token ids [...]."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -params.top_k][..., None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: chunked-prefill attention (THE SARATHI kernel).
+
+A prefill chunk of C query tokens (global positions ``start + i``) attends a
+KV cache prefix of S positions (the chunk's own KV already written at
+``[start, start+C)``), with the offset causal mask of paper Fig. 6:
+key j visible to query i iff  j <= start + i.
+
+Flash-style online softmax; grid = (heads, C/bq, S/bk) with the KV block
+axis innermost ("arbitrary" sequential semantics) so the fp32 running
+max / sum / accumulator live in VMEM scratch across the KV sweep.  Block
+shapes are MXU-aligned (bq/bk multiples of 128 on the lane dim; hd = 64/128/
+160/256 across the assigned configs).  ``start`` rides in SMEM via scalar
+prefetch.
+
+Layout: heads-major ([nq, C, hd] / [nk, S, hd]) so each program instance
+streams contiguous [block, hd] tiles HBM->VMEM.
+VMEM working set per instance: bq*hd(q) + 2*bk*hd(kv) + bq*bk(p) +
+bq*(hd+2) fp32 scratch — ~0.4 MiB at (128, 128, 128), far under 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, n_kv_blocks: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    start = start_ref[0]
+    q = q_ref[0]                                    # [bq, hd]
+    k = k_ref[0]                                    # [bk, hd]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+    qpos = start + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos <= qpos
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        o = jnp.where(l[:, None] > 0,
+                      acc_ref[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(q, k, v, start, *, bq: int = 128,
+                              bk: int = 128, interpret: bool = True):
+    """q [C, nq, hd] — the prefill chunk's queries (positions start+i)
+    k, v [S, nk, hd] — the full KV cache row (chunk's KV already written)
+    start — scalar int32 (tokens already prefilled).  Returns [C, nq, hd].
+
+    C and S must be multiples of bq / bk (the engine's chunk size and cache
+    length are MXU-aligned by construction, paper §4.4).
+    """
+    C, nq, hd = q.shape
+    S, nk = k.shape[0], k.shape[1]
+    if C % bq or S % bk:
+        raise ValueError(f"C={C} S={S} must tile by (bq={bq}, bk={bk})")
+    g = nq // nk
+    qh = jnp.moveaxis(q, 1, 0)                      # [nq, C, hd]
+    kh = jnp.moveaxis(k, 1, 0)                      # [nk, S, hd]
+    vh = jnp.moveaxis(v, 1, 0)
+    n_kv_blocks = S // bk
+    grid = (nq, C // bq, n_kv_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j, s_ref: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, s_ref: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, s_ref: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j, s_ref: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv_blocks=n_kv_blocks,
+                          scale=1.0 / math.sqrt(hd)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nq, C, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(start, jnp.int32).reshape(1), qh, kh, vh)
+    return jnp.moveaxis(out, 0, 1)

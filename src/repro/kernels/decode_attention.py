@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: batched decode attention.
+
+One new query token per sequence attends its full KV cache row (length ctx+1
+after the in-place write).  Grid = (B, nk, S/bk), KV innermost; the query
+block for a sequence is the [g, hd] group of query heads sharing one KV
+head, so the MXU works on a [g, hd] x [hd, bk] matmul per step with the KV
+tile streamed HBM->VMEM once per (sequence, kv-head).
+
+Per-sequence context lengths ride in SMEM via scalar prefetch — this is the
+kernel the decode half of a decode-maximal batch uses; the piggybacked
+sequences have heterogeneous ctx, which the mask handles per-row.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bk: int, n_kv_blocks: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    ctx = ctx_ref[b]
+    q = q_ref[0, 0]                                 # [g, hd]
+    k = k_ref[0, :, 0, :]                           # [bk, hd]
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [g, bk]
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos <= ctx
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        o = jnp.where(l[:, None] > 0,
+                      acc_ref[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, ctx, *, bk: int = 128,
+                     interpret: bool = True):
+    """q [B, nq, hd] (ONE new token per sequence); k, v [B, S, nk, hd]
+    (cache rows, new KV already written at position ctx); ctx [B] int32.
+    Returns [B, nq, hd]."""
+    B, nq, hd = q.shape
+    S, nk = k.shape[1], k.shape[2]
+    if S % bk:
+        raise ValueError(f"S={S} must tile by bk={bk}")
+    g = nq // nk
+    qh = q.reshape(B, nk, g, hd)
+    n_kv_blocks = S // bk
+    grid = (B, nk, n_kv_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, c_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j, c_ref: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j, c_ref: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, j, c_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, n_kv_blocks=n_kv_blocks,
+                          scale=1.0 / math.sqrt(hd)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nk, g, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(ctx, jnp.int32), qh, k, v)
+    return out.reshape(B, nq, hd)

@@ -1,0 +1,34 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else they run in
+``interpret=True`` mode (the kernel body executed op-by-op on CPU), which is
+how this container validates them against the ``ref.py`` oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import chunked_prefill_attention as _cpa
+from repro.kernels import decode_attention as _da
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def chunked_prefill_attention(q, k, v, start, *, bq: int = 128,
+                              bk: int = 128):
+    return _cpa.chunked_prefill_attention(
+        q, k, v, start, bq=bq, bk=bk, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k, v, ctx, *, bk: int = 128):
+    return _da.decode_attention(q, k, v, ctx, bk=bk,
+                                interpret=not _on_tpu())

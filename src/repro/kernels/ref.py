@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for every kernel (tests assert_allclose against these)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def chunked_prefill_attention_ref(q, k, v, start):
+    """q [C, nq, hd]; k, v [S, nk, hd]; start scalar."""
+    C = q.shape[0]
+    S = k.shape[0]
+    q_pos = (jnp.asarray(start, jnp.int32)
+             + jnp.arange(C, dtype=jnp.int32))[None]
+    mask = cm.causal_cache_mask(q_pos, S)
+    return cm.gqa_attention(q[None], k[None], v[None], mask)[0]
+
+
+def decode_attention_ref(q, k, v, ctx):
+    """q [B, nq, hd]; k, v [B, S, nk, hd]; ctx [B] (new token's position:
+    keys at positions <= ctx are visible)."""
+    mask = cm.causal_cache_mask(ctx[:, None].astype(jnp.int32), k.shape[1])
+    return cm.gqa_attention(q[:, None], k, v, mask)[:, 0]

@@ -1,0 +1,4 @@
+from repro.launch.mesh import batch_axes, make_host_mesh, \
+    make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh", "batch_axes"]

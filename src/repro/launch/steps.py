@@ -1,0 +1,195 @@
+"""Distributed step functions (train / prefill / decode / hybrid-serve) and
+their sharding-annotated argument specs — shared by dryrun.py, train.py and
+serve.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import shardings as sh
+from repro.models import stack
+from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.train import TrainConfig, loss_fn
+
+
+# --------------------------------------------------------------------------
+# step functions (pure, jit-able)
+# --------------------------------------------------------------------------
+def make_train_step_fn(cfg: ModelConfig, optimizer: str = "adamw",
+                       lr: float = 1e-4, seq_parallel: bool = True,
+                       multi_pod: bool = False):
+    """optimizer: 'adamw' | 'sgd' (sgd for archs whose AdamW state exceeds
+    the per-chip HBM budget at this mesh — see DESIGN.md).  seq_parallel
+    stores remat residuals sequence-sharded over the model axis."""
+    tcfg = TrainConfig(remat=True)
+    if seq_parallel:
+        baxes = ("pod", "data") if multi_pod else ("data",)
+        stack.set_train_activation_spec(P(baxes, "model", None))
+    else:
+        stack.set_train_activation_spec(None)
+
+    if optimizer == "adamw":
+        def step(params, opt_state, batch, memory=None):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, tcfg, p, batch, memory))(params)
+            params, opt_state, gnorm = adamw_update(
+                AdamWConfig(lr=lr), grads, opt_state, params)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+        return step
+
+    def step(params, opt_state, batch, memory=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, tcfg, p, batch, memory))(params)
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, opt_state, {"loss": loss}
+    return step
+
+
+def make_prefill_step_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        def step(params, frontend, cache):
+            """Encoder pass (the enc-dec 'prefill') + decoder BOS step that
+            seeds per-layer cross KV caches."""
+            memory = stack.encode(cfg, params, frontend)
+            B = frontend.shape[0]
+            bos = jnp.zeros((B, 1), jnp.int32)
+            logits, cache, _ = stack.forward_batched(
+                cfg, params, bos, cache, jnp.zeros((B,), jnp.int32),
+                memory=memory, logits_mode="last")
+            return logits, cache
+        return step
+
+    def step(params, tokens, start, cache, memory=None):
+        logits, cache, _ = stack.forward_batched(
+            cfg, params, tokens, cache, start, memory=memory,
+            logits_mode="last")
+        return logits, cache
+    return step
+
+
+def make_decode_step_fn(cfg: ModelConfig, decode_act_reshard: bool = None):
+    """serve_step.  ``decode_act_reshard`` (§Perf iteration on FSDP archs):
+    constrain layer-boundary activations to d-model-sharded layout so the
+    per-layer collective is O(activations), not an O(weights) all-gather.
+    Defaults on for FSDP archs; REPRO_DECODE_ACT_RESHARD=0 disables."""
+    import os
+    if decode_act_reshard is None:
+        decode_act_reshard = (
+            sh.use_fsdp(cfg)
+            and os.environ.get("REPRO_DECODE_ACT_RESHARD", "1") == "1")
+    stack.set_cache_activation_spec(
+        P(None, None, "data") if decode_act_reshard else None)
+
+    def step(params, tokens, start, cache):
+        """serve_step: ONE new token per sequence against the full cache."""
+        logits, cache, _ = stack.forward_batched(
+            cfg, params, tokens, cache, start, logits_mode="last")
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+    return step
+
+
+def make_hybrid_step_fn(cfg: ModelConfig):
+    """SARATHI decode-maximal serve step (packed chunk + decodes)."""
+    def step(params, pk, cache):
+        chunk_logits, decode_logits, cache, _ = stack.forward_packed(
+            cfg, params, pk, cache)
+        ct = (jnp.argmax(chunk_logits, axis=-1).astype(jnp.int32)
+              if chunk_logits is not None else None)
+        dt = (jnp.argmax(decode_logits, axis=-1).astype(jnp.int32)
+              if decode_logits is not None else None)
+        return ct, dt, cache
+    return step
+
+
+# --------------------------------------------------------------------------
+# sharded argument specs
+# --------------------------------------------------------------------------
+def train_optimizer_for(cfg: ModelConfig) -> str:
+    """AdamW unless params(bf16) + fp32 moments exceed per-chip HBM."""
+    # worst-case per-chip bytes under our sharding: full 2D for moe-EP /
+    # fsdp archs, else TP-only
+    chips = 256
+    if cfg.n_experts and cfg.n_experts % 16 == 0:
+        per_chip = cfg.param_count() * 10 / chips
+    elif sh.use_fsdp(cfg):
+        per_chip = cfg.param_count() * 10 / chips
+    else:
+        per_chip = cfg.param_count() * 10 / 16
+    return "adamw" if per_chip < 12e9 else "sgd"
+
+
+def build_dryrun(cfg: ModelConfig, shape_name: str, mesh,
+                 dtype=jnp.bfloat16) -> Tuple[Any, tuple, dict]:
+    """-> (step_fn, arg ShapeDtypeStructs, metadata).  Nothing is allocated;
+    params/cache/optimizer are eval_shape stand-ins with NamedShardings."""
+    import os
+    from repro.models import blocks as bk
+    ok, why = sh.shape_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(why)
+    # §Perf iteration 1: shard the MoE dispatch buffer (REPRO_MOE_DISPATCH
+    # _SHARD=0 restores the replicated baseline)
+    if cfg.n_experts and os.environ.get("REPRO_MOE_DISPATCH_SHARD",
+                                        "1") == "1":
+        data_size = 16 * (2 if "pod" in mesh.axis_names else 1)
+        bk.set_moe_dispatch_spec(P("data"), shards=data_size)
+    else:
+        bk.set_moe_dispatch_spec(None, shards=1)
+    specs = sh.input_specs(cfg, shape_name, mesh, dtype)
+    kind = specs["kind"]
+    key = jax.random.PRNGKey(0)
+
+    pshapes = jax.eval_shape(
+        functools.partial(stack.init_params, cfg, dtype=dtype), key)
+    pspecs = sh.param_pspecs(cfg, pshapes)
+    params = sh.with_sharding(mesh, pshapes, pspecs)
+    meta = {"kind": kind, "optimizer": None}
+
+    if kind == "train":
+        opt = train_optimizer_for(cfg)
+        meta["optimizer"] = opt
+        step = make_train_step_fn(cfg, optimizer=opt,
+                                  multi_pod="pod" in mesh.axis_names)
+        batch = {"tokens": specs["tokens"], "labels": specs["labels"]}
+        if opt == "adamw":
+            oshapes = jax.eval_shape(adamw_init, pshapes)
+            ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+            ostate = sh.with_sharding(mesh, oshapes, ospecs)
+        else:
+            ostate = sh.with_sharding(
+                mesh, jax.eval_shape(lambda: jnp.zeros((), jnp.int32)), P())
+        args = (params, ostate, batch)
+        if "memory" in specs:
+            args = args + (specs["memory"],)
+        donate = (0, 1)
+        return step, args, {**meta, "donate": donate}
+
+    B = specs["global_batch"]
+    S = specs["seq_len"]
+    cshapes = jax.eval_shape(
+        functools.partial(stack.init_cache, cfg, B, S, dtype=dtype))
+    cspecs = sh.cache_pspecs(cfg, cshapes, rows_axes=specs["rows_axes"])
+    cache = sh.with_sharding(mesh, cshapes, cspecs)
+
+    if kind == "prefill":
+        step = make_prefill_step_fn(cfg)
+        if cfg.family == "encdec":
+            args = (params, specs["frontend"], cache)
+            return step, args, {**meta, "donate": (2,)}
+        args = (params, specs["tokens"], specs["start"], cache)
+        if "memory" in specs:
+            args = args + (specs["memory"],)
+        return step, args, {**meta, "donate": (3,)}
+
+    step = make_decode_step_fn(cfg)
+    args = (params, specs["tokens"], specs["start"], cache)
+    return step, args, {**meta, "donate": (3,)}

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+Host mode (default): short training run of a reduced config on local
+devices, with checkpointing.
+Production mode (--dry-run): lower + compile train_step for the production
+mesh (see dryrun.py for the full grid).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 30
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-12b \
+        --dry-run [--multi-pod]
+"""
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+        from repro.launch.dryrun import run_one
+        run_one(args.arch, "train_4k", args.multi_pod, args.variant)
+        return
+
+    import jax
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, init_train_state, make_train_step
+
+    cfg = get_config(args.arch, variant=args.variant).reduced()
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=args.lr),
+                       warmup=max(args.steps // 10, 1),
+                       total_steps=args.steps)
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch))
+    memory = None
+    if cfg.family in ("vlm", "encdec"):
+        memory = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    for s in range(args.steps):
+        tok, lab = data.batch(s)
+        params, opt, m = step_fn(params, opt,
+                                 {"tokens": tok, "labels": lab}, memory)
+        if s % max(args.steps // 10, 1) == 0 or s == args.steps - 1:
+            print(f"step {s:4d}  loss={float(m['loss']):.4f}")
+    if args.ckpt_dir:
+        save_checkpoint(f"{args.ckpt_dir}/ckpt_{args.steps:06d}.msgpack",
+                        {"params": params}, {"steps": args.steps})
+        print("checkpoint saved")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.registry import Model, build_model
+from repro.models.packed import PackedBatch, make_packed
+
+__all__ = ["Model", "build_model", "PackedBatch", "make_packed"]

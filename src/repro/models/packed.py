@@ -1,0 +1,98 @@
+"""The SARATHI packed (hybrid) batch representation.
+
+A *decode-maximal* batch is ONE prefill chunk of ``C`` tokens belonging to a
+single request plus ``D`` piggybacked decode tokens (one token each from ``D``
+other requests).  All token-parallel linear operators run over the packed
+``[C + D, d_model]`` matrix — a single matmul, so the weights fetched from HBM
+for the compute-saturating chunk are reused by the decodes (paper §4.3).  Only
+the token-mixing cores (attention / SSM scan) treat the two segments
+separately, exactly as the paper specifies ("we fuse all the linear
+operations, while letting the attention computations ... happen separately").
+
+``C`` and ``D`` are static (they determine compiled shapes); slots/positions
+are dynamic.  ``C == 0`` degenerates to a pure decode batch (the baseline
+decode step), ``D == 0`` to a pure prefill-chunk step — both are served by the
+same code path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PackedBatch:
+    """One SARATHI iteration's worth of work.
+
+    chunk_tokens  [C] int32 — token ids of the prefill chunk (C may be 0)
+    chunk_slot    []  int32 — cache row of the chunk's request
+    chunk_start   []  int32 — tokens of this request already prefilled
+    chunk_len     []  int32 — VALID tokens in the chunk (<= C).  The engine
+                     compiles ONE (C, D) shape and pads the final partial
+                     chunk of a prompt; tokens at index >= chunk_len are
+                     padding.  Full-attention caches self-heal (padding KV is
+                     overwritten before it becomes visible to any query);
+                     ring-buffer writes and SSM/LRU state updates are masked
+                     explicitly.
+    decode_tokens [D] int32 — last sampled token of each piggybacked request
+    decode_slots  [D] int32 — cache rows
+    decode_ctx    [D] int32 — context length (== position of the new token)
+    """
+    chunk_tokens: jax.Array
+    chunk_slot: jax.Array
+    chunk_start: jax.Array
+    chunk_len: jax.Array
+    decode_tokens: jax.Array
+    decode_slots: jax.Array
+    decode_ctx: jax.Array
+
+    @property
+    def num_chunk(self) -> int:
+        return self.chunk_tokens.shape[0]
+
+    @property
+    def num_decode(self) -> int:
+        return self.decode_tokens.shape[0]
+
+    @property
+    def num_tokens(self) -> int:
+        return self.num_chunk + self.num_decode
+
+    def positions(self) -> jax.Array:
+        """Absolute position of every packed token, shape [C + D]."""
+        cpos = self.chunk_start + jnp.arange(self.num_chunk, dtype=jnp.int32)
+        return jnp.concatenate([cpos, self.decode_ctx.astype(jnp.int32)])
+
+    def token_ids(self) -> jax.Array:
+        return jnp.concatenate(
+            [self.chunk_tokens.astype(jnp.int32),
+             self.decode_tokens.astype(jnp.int32)])
+
+
+def make_packed(chunk_tokens=None, chunk_slot=0, chunk_start=0,
+                chunk_len=None, decode_tokens=None, decode_slots=None,
+                decode_ctx=None) -> PackedBatch:
+    """Convenience constructor with numpy/python inputs."""
+    ct = jnp.asarray(chunk_tokens if chunk_tokens is not None else [],
+                     dtype=jnp.int32)
+    dt = jnp.asarray(decode_tokens if decode_tokens is not None else [],
+                     dtype=jnp.int32)
+    D = dt.shape[0]
+    ds = jnp.asarray(decode_slots if decode_slots is not None
+                     else jnp.zeros((D,)), dtype=jnp.int32)
+    dc = jnp.asarray(decode_ctx if decode_ctx is not None
+                     else jnp.zeros((D,)), dtype=jnp.int32)
+    cl = chunk_len if chunk_len is not None else ct.shape[0]
+    return PackedBatch(
+        chunk_tokens=ct,
+        chunk_slot=jnp.asarray(chunk_slot, dtype=jnp.int32),
+        chunk_start=jnp.asarray(chunk_start, dtype=jnp.int32),
+        chunk_len=jnp.asarray(cl, dtype=jnp.int32),
+        decode_tokens=dt,
+        decode_slots=ds,
+        decode_ctx=dc,
+    )

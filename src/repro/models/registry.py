@@ -1,0 +1,47 @@
+"""``build_model(cfg)`` — a thin namespace binding the generic stack to a
+config, the public modelling API used by the engine / launcher / tests."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import stack
+from repro.models.packed import PackedBatch
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init_params(self, key, dtype=jnp.float32):
+        return stack.init_params(self.cfg, key, dtype)
+
+    def init_cache(self, rows: int, max_len: int, dtype=jnp.float32):
+        return stack.init_cache(self.cfg, rows, max_len, dtype)
+
+    def forward_batched(self, params, tokens, cache=None, start=None, *,
+                        memory=None, train=False, logits_mode="all",
+                        remat=False):
+        return stack.forward_batched(
+            self.cfg, params, tokens, cache, start, memory=memory,
+            train=train, logits_mode=logits_mode, remat=remat)
+
+    def forward_packed(self, params, pk: PackedBatch, cache):
+        return stack.forward_packed(self.cfg, params, pk, cache)
+
+    def encode(self, params, frontend_embeds):
+        return stack.encode(self.cfg, params, frontend_embeds)
+
+    def seed_cross_kv(self, params, cache, memory, slot):
+        return stack.seed_cross_kv(self.cfg, params, cache, memory, slot)
+
+    @property
+    def needs_memory(self) -> bool:
+        return self.cfg.family in ("vlm", "encdec")
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

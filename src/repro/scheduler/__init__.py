@@ -1,0 +1,7 @@
+from repro.scheduler.request import Request, State
+from repro.scheduler.policies import (POLICIES, OrcaScheduler,
+                                      RequestLevelScheduler, SarathiScheduler,
+                                      Scheduler)
+
+__all__ = ["Request", "State", "Scheduler", "SarathiScheduler",
+           "OrcaScheduler", "RequestLevelScheduler", "POLICIES"]

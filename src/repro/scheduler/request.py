@@ -1,0 +1,72 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int
+    req_id: int = field(default_factory=lambda: next(_ids))
+    arrival_time: float = 0.0
+    memory: Optional[object] = None          # frontend embeddings (vlm/audio)
+    eos_token: Optional[int] = None
+
+    state: State = State.QUEUED
+    prefilled: int = 0                       # prompt tokens already processed
+    output: List[int] = field(default_factory=list)
+
+    # bookkeeping for metrics
+    first_token_iter: Optional[int] = None
+    finish_iter: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def context_len(self) -> int:
+        """Tokens currently in the cache for this request."""
+        return self.prefilled + len(self.output)
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.prefilled
+
+    @property
+    def decode_position(self) -> int:
+        """Cache position where the pending token will be written: the last
+        sampled token has not been processed yet, so it sits at
+        context_len - 1."""
+        return self.context_len - 1
+
+    @property
+    def last_token(self) -> int:
+        return self.output[-1] if self.output else self.prompt[-1]
+
+    @property
+    def done(self) -> bool:
+        return self.state == State.FINISHED
+
+    def record_token(self, tok: int, iteration: int):
+        if not self.output:
+            self.first_token_iter = iteration
+        self.output.append(tok)
+        if (len(self.output) >= self.max_new_tokens
+                or (self.eos_token is not None and tok == self.eos_token)):
+            self.state = State.FINISHED
+            self.finish_iter = iteration

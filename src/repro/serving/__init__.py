@@ -1,0 +1,3 @@
+from repro.serving.server import IterationStats, Server, ServeResult
+
+__all__ = ["Server", "ServeResult", "IterationStats"]

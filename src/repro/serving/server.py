@@ -1,0 +1,86 @@
+"""Offline batched serving: scheduler policy x SARATHI engine.
+
+Drives a workload of :class:`repro.scheduler.Request`s to completion and
+records per-iteration composition statistics (prefill/decode token counts),
+which are also what the pipeline-parallel simulator consumes to quantify
+micro-batch uniformity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import Engine
+from repro.core.sampling import SamplingParams
+from repro.scheduler import POLICIES, Request
+
+
+@dataclass
+class IterationStats:
+    n_prefill_tokens: int
+    n_decode_tokens: int
+
+
+@dataclass
+class ServeResult:
+    outputs: Dict[int, List[int]]
+    iterations: List[IterationStats] = field(default_factory=list)
+
+    @property
+    def total_prefill_tokens(self) -> int:
+        return sum(s.n_prefill_tokens for s in self.iterations)
+
+    @property
+    def total_decode_tokens(self) -> int:
+        return sum(s.n_decode_tokens for s in self.iterations)
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, *, policy: str = "sarathi",
+                 chunk_size: int = 256, n_slots: int = 8,
+                 max_len: int = 4096, max_prompt_len: Optional[int] = None,
+                 dtype=jnp.float32,
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0):
+        if policy not in POLICIES:
+            raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
+        self.cfg = cfg
+        self.policy_name = policy
+        # Orca / request-level submit whole prompts as one 'chunk', so their
+        # engines compile with C = max prompt length.
+        engine_chunk = chunk_size if policy == "sarathi" else \
+            (max_prompt_len or max_len)
+        self.engine = Engine(cfg, params, n_slots=n_slots, max_len=max_len,
+                             chunk_size=engine_chunk,
+                             decode_slots=max(n_slots - 1, 1), dtype=dtype,
+                             sampling=sampling, seed=seed)
+        self.scheduler = POLICIES[policy](
+            n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
+            chunk_size=chunk_size)
+
+    def run(self, requests: Sequence[Request],
+            max_iterations: int = 100_000) -> ServeResult:
+        for r in requests:
+            self.scheduler.submit(r)
+        result = ServeResult(outputs={})
+
+        def admit(req: Request):
+            self.engine.add_request(req.req_id, memory=req.memory)
+
+        def release(req: Request):
+            self.engine.release(req.req_id)
+            result.outputs[req.req_id] = list(req.output)
+
+        it = 0
+        while self.scheduler.has_work and it < max_iterations:
+            plan = self.scheduler.next_plan(admit_hook=admit)
+            if plan is None:
+                break
+            tokens = self.engine.execute(plan)
+            result.iterations.append(IterationStats(
+                plan.n_prefill_tokens, plan.n_decode_tokens))
+            self.scheduler.on_tokens(tokens, release_hook=release)
+            it += 1
+        return result

@@ -1,0 +1,225 @@
+"""Analytical op-level cost model for one engine iteration.
+
+Mirrors the paper's methodology (§5.3: "profile the runtime for each
+operation in Table 1 ... build a regression model"): each transformer
+operation is costed as max(compute-time, memory-time) + launch overhead,
+with the crucial SARATHI property modelled explicitly — in a fused
+(decode-maximal) batch the weights are fetched from HBM ONCE for the packed
+token matrix, whereas separate prefill-only / decode-only iterations each
+pay the full weight fetch.
+
+The model is used to (a) reproduce the paper's tables/figures without GPU
+hardware, (b) drive chunk-size selection, and (c) time micro-batches in the
+pipeline-parallel simulator.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.sim.hardware import Hardware
+
+BYTES = 2  # fp16/bf16 weights and activations
+
+
+# --------------------------------------------------------------------------
+# batch composition
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PrefillSeg:
+    n_tokens: int                # chunk length (== full prompt if unchunked)
+    ctx_start: int = 0           # tokens already in the KV cache
+
+
+@dataclass(frozen=True)
+class DecodeSeg:
+    n_seqs: int
+    ctx: int                     # average context length per sequence
+
+
+@dataclass(frozen=True)
+class BatchSpec:
+    prefills: Tuple[PrefillSeg, ...] = ()
+    decodes: Tuple[DecodeSeg, ...] = ()
+    fused: bool = True           # decode-maximal: linear ops share one fetch
+
+    @property
+    def n_tokens(self) -> int:
+        return (sum(p.n_tokens for p in self.prefills)
+                + sum(d.n_seqs for d in self.decodes))
+
+
+# --------------------------------------------------------------------------
+# primitive costs
+# --------------------------------------------------------------------------
+def _matmul_time(hw: Hardware, m: int, k: int, n: int,
+                 weight_bytes: float, act_bytes: float,
+                 quantize_tiles: bool = True) -> float:
+    """One [m,k]x[k,n] matmul: max(compute, memory) + overhead.  ``m`` is the
+    token dimension; tile quantization pads it to a multiple of hw.tile
+    (paper §4.4 'tile quantization effect' / Fig. 7)."""
+    if m == 0:
+        return 0.0
+    m_eff = math.ceil(m / hw.tile) * hw.tile if quantize_tiles else m
+    flops = 2.0 * m_eff * k * n
+    t_compute = flops / (hw.peak_flops * hw.matmul_eff)
+    t_memory = (weight_bytes + act_bytes) / (hw.hbm_bw * hw.mem_eff)
+    return max(t_compute, t_memory) + hw.kernel_overhead
+
+
+def _attention_time(hw: Hardware, n_q: int, n_kv: int, n_heads: int,
+                    n_kv_heads: int, head_dim: int) -> float:
+    """Score + AV for n_q query tokens against n_kv cached tokens."""
+    if n_q == 0 or n_kv == 0:
+        return 0.0
+    flops = 2.0 * 2.0 * n_q * n_kv * n_heads * head_dim
+    kv_bytes = 2.0 * n_kv * n_kv_heads * head_dim * BYTES
+    q_bytes = n_q * n_heads * head_dim * BYTES
+    t_compute = flops / (hw.peak_flops * hw.matmul_eff)
+    t_memory = (kv_bytes + q_bytes) / (hw.hbm_bw * hw.mem_eff)
+    return max(t_compute, t_memory) + hw.kernel_overhead
+
+
+# --------------------------------------------------------------------------
+# per-iteration model
+# --------------------------------------------------------------------------
+@dataclass
+class CostBreakdown:
+    preproj: float = 0.0
+    attn: float = 0.0
+    postproj: float = 0.0
+    ffn: float = 0.0
+    others: float = 0.0
+
+    @property
+    def linear(self) -> float:
+        return self.preproj + self.postproj + self.ffn
+
+    @property
+    def total(self) -> float:
+        return self.linear + self.attn + self.others
+
+
+def _linear_ops_time(cfg: ModelConfig, hw: Hardware, token_groups:
+                     Sequence[int], fused: bool) -> Tuple[float, float, float]:
+    """Time of the four linear ops for one layer.
+
+    ``token_groups`` — token counts that are executed as separate matmuls
+    (e.g. [chunk+decodes] when fused, [chunk, decodes] when not).  The
+    weights are fetched per GROUP — this is the decode-piggybacking effect.
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    qkv_out = cfg.q_dim + 2 * cfg.kv_dim
+    w_qkv = d * qkv_out * BYTES
+    w_o = cfg.q_dim * d * BYTES
+    n_ffn_mats = 3 if cfg.act == "silu" else 2
+    w_ffn = n_ffn_mats * d * f * BYTES
+
+    pre = post = ffn = 0.0
+    for m in token_groups:
+        if m == 0:
+            continue
+        act = m * d * BYTES
+        pre += _matmul_time(hw, m, d, qkv_out, w_qkv, act + m * qkv_out * BYTES)
+        post += _matmul_time(hw, m, cfg.q_dim, d, w_o, act * 2)
+        # gate/up then down (counted as one fused ffn op per paper Table 1)
+        ffn += _matmul_time(hw, m, d, n_ffn_mats * f, w_ffn,
+                            act + m * f * BYTES)
+    return pre, post, ffn
+
+
+def _moe_ffn_time(cfg: ModelConfig, hw: Hardware, token_groups:
+                  Sequence[int], fused: bool) -> float:
+    """MoE FFN: per group, FLOPs scale with top-k tokens; weight traffic is
+    the experts actually touched (min(E, T*k) in expectation)."""
+    d, f, E, k = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k
+    expert_w = 3 * d * f * BYTES
+    t = 0.0
+    for m in token_groups:
+        if m == 0:
+            continue
+        touched = min(E, m * k)
+        flops = 2.0 * 3 * (m * k) * d * f
+        w_bytes = touched * expert_w
+        a_bytes = m * d * BYTES * 2
+        t_c = flops / (hw.peak_flops * hw.matmul_eff)
+        t_m = (w_bytes + a_bytes) / (hw.hbm_bw * hw.mem_eff)
+        t += max(t_c, t_m) + hw.kernel_overhead
+    return t
+
+
+def iteration_time(cfg: ModelConfig, hw: Hardware, spec: BatchSpec,
+                   n_chips: int = 1, others_frac: float = 0.05
+                   ) -> CostBreakdown:
+    """Model one engine iteration over the whole model (all layers).
+
+    ``n_chips`` divides weights/compute (ideal tensor parallelism — the
+    paper's simulation makes the same assumption, §5.3).  ``others_frac``
+    adds the paper's measured <5% for norms/residuals/activations.
+    """
+    bd = CostBreakdown()
+    if spec.fused:
+        groups = [spec.n_tokens]
+    else:
+        groups = [p.n_tokens for p in spec.prefills] + \
+                 [sum(d.n_seqs for d in spec.decodes)]
+
+    pre, post, ffn_t = _linear_ops_time(cfg, hw, groups, spec.fused)
+    if cfg.n_experts:
+        ffn_t = _moe_ffn_time(cfg, hw, groups, spec.fused)
+    # attention is always computed per segment (paper §4.3: "letting the
+    # attention computations ... happen separately")
+    attn = 0.0
+    for p in spec.prefills:
+        # chunk queries attend ctx_start + triangular within-chunk keys
+        avg_kv = p.ctx_start + (p.n_tokens + 1) / 2.0
+        attn += _attention_time(hw, p.n_tokens, max(int(avg_kv), 1),
+                                cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    for dseg in spec.decodes:
+        attn += dseg.n_seqs * _attention_time(
+            hw, 1, dseg.ctx, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+    L = cfg.n_layers
+    scale = L / max(n_chips, 1)
+    bd.preproj = pre * scale
+    bd.postproj = post * scale
+    bd.ffn = ffn_t * scale
+    bd.attn = attn * scale
+    bd.others = (bd.linear + bd.attn) * others_frac
+    return bd
+
+
+# --------------------------------------------------------------------------
+# convenience entry points used by benchmarks / chunk-size selection
+# --------------------------------------------------------------------------
+def prefill_time(cfg, hw, n_tokens: int, ctx_start: int = 0,
+                 n_chips: int = 1) -> float:
+    return iteration_time(
+        cfg, hw, BatchSpec(prefills=(PrefillSeg(n_tokens, ctx_start),)),
+        n_chips).total
+
+
+def decode_time(cfg, hw, batch: int, ctx: int, n_chips: int = 1) -> float:
+    return iteration_time(
+        cfg, hw, BatchSpec(decodes=(DecodeSeg(batch, ctx),)), n_chips).total
+
+
+def hybrid_time(cfg, hw, chunk: int, ctx_start: int, n_decodes: int,
+                decode_ctx: int, n_chips: int = 1) -> float:
+    return iteration_time(
+        cfg, hw, BatchSpec(prefills=(PrefillSeg(chunk, ctx_start),),
+                           decodes=(DecodeSeg(n_decodes, decode_ctx),)),
+        n_chips).total
+
+
+def chunked_prefill_total(cfg, hw, prompt_len: int, chunk: int,
+                          n_chips: int = 1) -> float:
+    """Full prefill executed as chunks (paper Fig. 13 ablation)."""
+    t, start = 0.0, 0
+    while start < prompt_len:
+        n = min(chunk, prompt_len - start)
+        t += prefill_time(cfg, hw, n, start, n_chips)
+        start += n
+    return t

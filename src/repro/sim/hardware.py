@@ -1,0 +1,36 @@
+"""Hardware profiles for the analytical cost model.
+
+Effective efficiencies are calibrated so the model reproduces the paper's
+measured LLaMA-13B/A6000 numbers (Table 2): 155 TF fp16 tensor peak at
+~0.76 matmul efficiency gives the 224.8 ms linear-op prefill time; 768 GB/s
+at ~0.77 gives the 44.3 ms decode weight-fetch time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float            # dense fp16/bf16 FLOP/s per chip
+    hbm_bw: float                # bytes/s per chip
+    link_bw: float               # bytes/s per ICI/NVLink direction
+    matmul_eff: float = 0.76     # achieved fraction of peak for big matmuls
+    mem_eff: float = 0.77        # achieved fraction of HBM bandwidth
+    kernel_overhead: float = 5e-6  # fixed per-op launch/dispatch cost (s)
+    tile: int = 128              # matmul tile (thread-block tile / MXU edge)
+
+    @property
+    def flops_per_byte(self) -> float:
+        """The roofline ridge point (paper: ~53 A6000, ~156 A100)."""
+        return self.peak_flops / self.hbm_bw
+
+
+A6000 = Hardware("A6000", peak_flops=155e12, hbm_bw=768e9, link_bw=56e9)
+A100 = Hardware("A100-80GB", peak_flops=312e12, hbm_bw=2039e9, link_bw=300e9)
+# TPU v5e — the deployment target (constants fixed by the assignment).
+TPU_V5E = Hardware("TPUv5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+                   matmul_eff=0.8, mem_eff=0.8, kernel_overhead=2e-6)
+
+PROFILES = {h.name.lower(): h for h in (A6000, A100, TPU_V5E)}

@@ -1,0 +1,156 @@
+"""Discrete-event pipeline-parallel simulator (paper §5.3, Fig. 5 / Fig. 12).
+
+Simulates iteration-level scheduling over a PP pipeline: micro-batches are
+IterationPlans produced by a scheduler policy (sarathi / orca / ...), stage
+time comes from the analytical cost model with layers split evenly over
+stages, and a request's next iteration may only be scheduled after its
+previous iteration leaves the LAST stage (the autoregressive dependency that
+makes LLM pipeline bubbles special — Fig. 5's PB1/PB2/PB3).
+
+Outputs per-stage idle (bubble) time, per-request bubble attribution, and
+makespan — the quantities behind the paper's 6.29x bubble reduction and
+1.91x end-to-end GPT-3 speedup.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import IterationPlan
+from repro.scheduler.policies import Scheduler
+from repro.scheduler.request import Request, State
+from repro.sim.cost_model import BatchSpec, DecodeSeg, PrefillSeg, \
+    iteration_time
+from repro.sim.hardware import Hardware
+
+
+def plan_to_spec(plan: IterationPlan, fused: bool = True) -> BatchSpec:
+    prefills = ()
+    if plan.chunk:
+        prefills = (PrefillSeg(len(plan.chunk.tokens), plan.chunk.start),)
+    decodes = ()
+    if plan.decodes:
+        avg_ctx = sum(d.ctx for d in plan.decodes) / len(plan.decodes)
+        decodes = (DecodeSeg(len(plan.decodes), max(int(avg_ctx), 1)),)
+    return BatchSpec(prefills=prefills, decodes=decodes, fused=fused)
+
+
+@dataclass
+class PipelineResult:
+    makespan: float
+    stage_busy: List[float]
+    stage_idle: List[float]
+    request_bubble: Dict[int, float]      # req_id -> attributed bubble time
+    request_finish: Dict[int, float]
+    n_microbatches: int
+
+    @property
+    def total_bubble(self) -> float:
+        return sum(self.stage_idle)
+
+    @property
+    def median_request_bubble(self) -> float:
+        v = sorted(self.request_bubble.values())
+        return v[len(v) // 2] if v else 0.0
+
+
+def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
+                      scheduler: Scheduler, *, pp: int, tp: int = 1,
+                      fused: bool = True,
+                      p2p_bytes_per_token: Optional[int] = None,
+                      max_iters: int = 1_000_000) -> PipelineResult:
+    """Run the scheduler's workload through a ``pp``-stage pipeline.
+
+    ``tp`` chips per stage split each stage's work (ideal TP).  Micro-batch
+    stage time = iteration_time over n_layers/pp layers.  A simple P2P
+    activation transfer cost is added between stages.
+    """
+    stage_free = [0.0] * pp
+    ready_at: Dict[int, float] = {}
+    req_bubble: Dict[int, float] = {}
+    req_finish: Dict[int, float] = {}
+    stage_busy = [0.0] * pp
+    n_mb = 0
+
+    if p2p_bytes_per_token is None:
+        p2p_bytes_per_token = cfg.d_model * 2
+
+    def stage_time(plan: IterationPlan) -> float:
+        bd = iteration_time(cfg, hw, plan_to_spec(plan, fused), n_chips=tp)
+        return bd.total / pp
+
+    def p2p_time(plan: IterationPlan) -> float:
+        toks = (len(plan.chunk.tokens) if plan.chunk else 0) + \
+            len(plan.decodes)
+        return toks * p2p_bytes_per_token / hw.link_bw
+
+    # Requests involved in an in-flight micro-batch are locked until it
+    # drains the pipeline; the scheduler only sees unlocked requests.
+    locked: Dict[int, float] = {}     # req_id -> unlock time
+
+    for it in range(max_iters):
+        if not scheduler.has_work:
+            break
+        now = stage_free[0]
+        # unlock requests whose previous iteration has drained
+        for rid in [r for r, t in locked.items() if t <= now]:
+            del locked[rid]
+        runnable = [r for r in scheduler.running if r.req_id not in locked]
+        if not (runnable or scheduler.waiting):
+            # idle until the next unlock
+            t_next = min(locked.values())
+            stage_free[0] = t_next
+            continue
+        # temporarily hide locked requests from the scheduler
+        hidden = [r for r in scheduler.running if r.req_id in locked]
+        scheduler.running = [r for r in scheduler.running
+                             if r.req_id not in locked]
+        plan = scheduler.next_plan()
+        scheduler.running.extend(hidden)
+        if plan is None:
+            if locked:
+                stage_free[0] = min(locked.values())
+                continue
+            break
+        n_mb += 1
+        dt = stage_time(plan)
+        hop = p2p_time(plan)
+        ids = ([plan.chunk.req_id] if plan.chunk else []) + \
+            [d.req_id for d in plan.decodes]
+
+        t_prev_finish = None
+        for s in range(pp):
+            start = stage_free[s] if t_prev_finish is None else \
+                max(stage_free[s], t_prev_finish + hop)
+            idle = start - stage_free[s]
+            if s > 0 and idle > 0:
+                share = idle / max(len(ids), 1)
+                for rid in ids:
+                    req_bubble[rid] = req_bubble.get(rid, 0.0) + share
+            finish = start + dt
+            stage_busy[s] += dt
+            stage_free[s] = finish
+            t_prev_finish = finish
+        # autoregressive dependency: these requests rejoin after drain
+        for rid in ids:
+            locked[rid] = t_prev_finish
+        # feed dummy tokens (content-independent timing model)
+        tokens = {rid: 1 for rid in ids
+                  if (plan.chunk and rid == plan.chunk.req_id
+                      and plan.chunk.is_last)
+                  or rid in [d.req_id for d in plan.decodes]}
+        scheduler.on_tokens(tokens)
+        for r in list(scheduler.running):
+            if r.done:
+                req_finish[r.req_id] = t_prev_finish
+        for rid in tokens:
+            if rid not in [r.req_id for r in scheduler.running]:
+                req_finish.setdefault(rid, t_prev_finish)
+
+    makespan = max(stage_free)
+    stage_idle = [makespan - b for b in stage_busy]
+    return PipelineResult(makespan=makespan, stage_busy=stage_busy,
+                          stage_idle=stage_idle, request_bubble=req_bubble,
+                          request_finish=req_finish, n_microbatches=n_mb)

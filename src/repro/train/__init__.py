@@ -1,0 +1,5 @@
+from repro.train.loop import (TrainConfig, cross_entropy, init_train_state,
+                              loss_fn, make_train_step)
+
+__all__ = ["TrainConfig", "cross_entropy", "loss_fn", "make_train_step",
+           "init_train_state"]

@@ -1,0 +1,100 @@
+"""Training step + loop (used by examples/train_tiny.py and the train_4k
+dry-run shape)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.optim import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                         cosine_schedule)
+
+
+def cross_entropy(logits, labels):
+    """Mean token cross-entropy in fp32; logits [B, S, V], labels [B, S]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(hidden, unembed, labels, chunk: int = 512):
+    """Cross-entropy WITHOUT materialising the [B, S, V] logits: the unembed
+    matmul + logsumexp run per sequence-chunk under lax.scan (recomputed in
+    the backward pass).  hidden [B, S, d], unembed [d, V], labels [B, S]."""
+    B, S, d = hidden.shape
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    n = (S + pad) // chunk
+    h = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)
+    y = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    idx = jnp.arange(n) * chunk
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, yc, start = xs
+        logits = (hc @ unembed).astype(jnp.float32)       # [B, chunk, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, yc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        valid = (start + jnp.arange(chunk))[None, :] < S
+        return acc + jnp.sum(jnp.where(valid, logz - gold, 0.0)), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (h, y, idx))
+    return total / (B * S)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup: int = 50
+    total_steps: int = 500
+    remat: bool = True
+    moe_aux_weight: float = 1e-2
+
+
+def loss_fn(cfg: ModelConfig, tcfg: TrainConfig, params, batch,
+            memory=None):
+    model = build_model(cfg)
+    hidden, _, aux = model.forward_batched(
+        params, batch["tokens"], train=True, memory=memory,
+        logits_mode="hidden", remat=tcfg.remat)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    loss = chunked_cross_entropy(hidden, unembed, batch["labels"])
+    if cfg.n_experts:
+        loss = loss + tcfg.moe_aux_weight * aux / cfg.n_layers
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` — the function the launcher jits with shardings."""
+
+    def train_step(params, opt_state: AdamWState, batch,
+                   memory=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, tcfg, p, batch, memory))(params)
+        lr_scale = cosine_schedule(opt_state.step, warmup=tcfg.warmup,
+                                   total=tcfg.total_steps)
+        params, opt_state, gnorm = adamw_update(
+            tcfg.optimizer, grads, opt_state, params, lr_scale)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, dtype=jnp.float32):
+    model = build_model(cfg)
+    params = model.init_params(key, dtype)
+    return params, adamw_init(params)

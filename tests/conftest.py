@@ -1,0 +1,44 @@
+import dataclasses
+import functools
+
+import jax
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.models import build_model
+
+ARCHS = sorted(ASSIGNED)
+
+
+def reduced_cfg(arch: str):
+    """Reduced smoke config; MoE archs get dropless capacity so chunked /
+    hybrid execution is bit-equivalent to full prefill (capacity dropping
+    is batch-composition-dependent by design — see DESIGN.md)."""
+    cfg = ASSIGNED[arch]().reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts / cfg.top_k))
+    return cfg
+
+
+@functools.lru_cache(maxsize=None)
+def cached_model(arch: str):
+    cfg = reduced_cfg(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(42)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jit_caches():
+    """XLA-CPU JIT dylibs accumulate across a long single-process run and
+    can exhaust the JIT linker ('Failed to materialize symbols'); drop
+    compiled programs (and our model cache) between test modules."""
+    yield
+    cached_model.cache_clear()
+    jax.clear_caches()

@@ -1,0 +1,102 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import common as cm
+
+
+def _qkv(key, B, Lq, S, nq, nk, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, Lq, nq, hd), dtype),
+            jax.random.normal(ks[1], (B, S, nk, hd), dtype),
+            jax.random.normal(ks[2], (B, S, nk, hd), dtype))
+
+
+@pytest.mark.parametrize("window", [None, 7, 64])
+@pytest.mark.parametrize("qb,kb", [(16, 32), (128, 128), (5, 7)])
+def test_blocked_matches_direct(window, qb, kb):
+    B, Lq, S, nq, nk, hd = 2, 33, 77, 6, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, Lq, S, nq, nk, hd)
+    q_pos = jnp.tile(jnp.arange(40, 40 + Lq)[None], (B, 1))
+    ref = cm.gqa_attention(q, k, v, cm.causal_cache_mask(q_pos, S, window))
+    out = cm.blocked_gqa_attention(q, k, v, q_pos, window=window,
+                                   qb=qb, kb=kb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_non_causal():
+    B, Lq, S, nq, nk, hd = 1, 10, 24, 4, 4, 8
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, Lq, S, nq, nk, hd)
+    q_pos = jnp.tile(jnp.arange(Lq)[None], (B, 1))
+    ref = cm.gqa_attention(q, k, v, jnp.ones((B, Lq, S), bool))
+    out = cm.blocked_gqa_attention(q, k, v, q_pos, causal=False, qb=4, kb=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_all_masked_rows_zero():
+    B, Lq, S, nq, nk, hd = 1, 4, 16, 2, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, Lq, S, nq, nk, hd)
+    out = cm.blocked_gqa_attention(q, k, v, jnp.full((B, Lq), -3), qb=2, kb=4)
+    assert np.allclose(np.asarray(out), 0.0)
+
+
+@settings(deadline=None, max_examples=25)
+@given(Lq=st.integers(1, 40), S=st.integers(1, 60),
+       start=st.integers(0, 50), g=st.sampled_from([1, 2, 4]))
+def test_blocked_property_random_shapes(Lq, S, start, g):
+    nk, hd = 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(Lq * 64 + S), 1, Lq, S, nk * g, nk, hd)
+    q_pos = (start + jnp.arange(Lq))[None]
+    ref = cm.gqa_attention(q, k, v, cm.causal_cache_mask(q_pos, S))
+    out = cm.blocked_gqa_attention(q, k, v, q_pos, qb=16, kb=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_rope_position_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    hd = 16
+    k = jax.random.PRNGKey(3)
+    q = jax.random.normal(k, (1, 1, 1, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, hd))
+
+    def score(qp, kp):
+        sq, cq = cm.rope_sin_cos(jnp.array([[qp]]), hd, 10000.0)
+        sk, ck = cm.rope_sin_cos(jnp.array([[kp]]), hd, 10000.0)
+        qr = cm.apply_rope(q, sq, cq)
+        kr = cm.apply_rope(kk, sk, ck)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-4
+    assert abs(score(5, 3) - score(6, 3)) > 1e-6
+
+
+def test_ring_mask():
+    q_pos = jnp.array([[10]])
+    cache_pos = jnp.array([[8, 9, 3, -1]])
+    m = cm.ring_cache_mask(q_pos, cache_pos, window=4)
+    # visible: pos in (6, 10] and >= 0 -> 8, 9 yes; 3 too old; -1 empty
+    assert m.tolist() == [[[True, True, False, False]]]
+
+
+def test_write_kv_rows_and_scatter():
+    cache = jnp.zeros((2, 8, 1, 4))
+    new = jnp.ones((2, 3, 1, 4))
+    out = cm.write_kv_rows(cache, new, jnp.array([0, 5]))
+    assert float(out[0, :3].sum()) == 12 and float(out[0, 3:].sum()) == 0
+    assert float(out[1, 5:].sum()) == 12 and float(out[1, :5].sum()) == 0
+    out2 = cm.write_kv_scatter(cache, jnp.ones((2, 1, 4)),
+                               jnp.array([1, 0]), jnp.array([7, 2]))
+    assert float(out2[1, 7].sum()) == 4 and float(out2[0, 2].sum()) == 4
+
+
+def test_segsum():
+    x = jnp.array([1.0, 2.0, 3.0])
+    s = cm.segsum(x)
+    assert float(s[2, 0]) == 5.0       # x1 + x2
+    assert float(s[1, 1]) == 0.0
+    assert s[0, 1] == -jnp.inf

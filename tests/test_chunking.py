@@ -1,0 +1,59 @@
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (MXU_TILE, kv_reload_bytes_factor, num_chunks,
+                        optimal_pd_ratio, piggyback_coverage, plan_chunks,
+                        quantized_chunk_size, select_chunk_size)
+
+
+@given(P=st.integers(1, 10_000), C=st.integers(1, 2048))
+def test_plan_chunks_partition(P, C):
+    chunks = plan_chunks(P, C)
+    assert sum(c.length for c in chunks) == P
+    assert chunks[0].start == 0
+    for a, b in zip(chunks, chunks[1:]):
+        assert b.start == a.start + a.length
+        assert a.length == C                       # only last may be partial
+    assert chunks[-1].is_last and not any(c.is_last for c in chunks[:-1])
+    assert len(chunks) == num_chunks(P, C) == math.ceil(P / C)
+
+
+@given(P=st.integers(2, 5000), C=st.integers(1, 1024))
+def test_kv_reload_factor_bounds(P, C):
+    f = kv_reload_bytes_factor(P, C)
+    n = num_chunks(P, C)
+    assert 1.0 <= f <= n
+    if C >= P:
+        assert f == 1.0
+
+
+def test_kv_reload_example():
+    # 4 equal chunks: loads = (1+2+3+4)/4 = 2.5x
+    assert kv_reload_bytes_factor(1024, 256) == pytest.approx(2.5)
+
+
+@given(target=st.integers(32, 4096), D=st.integers(0, 512))
+def test_quantized_chunk_size_mxu_alignment(target, D):
+    c = quantized_chunk_size(target, D)
+    assert c > 0
+    assert (c + D) % MXU_TILE == 0                 # paper §4.4 / Fig. 7
+
+
+def test_optimal_pd_ratio():
+    # paper §5.1.3: C=256, B=18 -> P:D ~ 256/17 ~ 15
+    assert optimal_pd_ratio(256, 18) == pytest.approx(256 / 17)
+
+
+def test_select_chunk_size_prefers_balance():
+    # toy iteration cost: prefill tokens dominate; tiny chunks pay overhead
+    def t(p, d):
+        return 1e-3 + p * 1e-5 + d * 2e-5 + (5e-3 if 0 < p < 128 else 0)
+    c = select_chunk_size(t, prompt_len=2048, decode_len=128, batch_size=8)
+    assert (c + 7) % MXU_TILE == 0
+    assert c >= 121
+
+
+def test_piggyback_coverage():
+    assert piggyback_coverage(1024, 3, 128) == 8 * 3   # paper §4.4 example

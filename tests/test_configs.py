@@ -1,0 +1,66 @@
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, list_archs
+
+
+def test_ten_assigned_archs():
+    assert len(ASSIGNED) == 10
+    fams = {ASSIGNED[a]().family for a in ASSIGNED}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "vlm", "encdec"}
+
+
+@pytest.mark.parametrize("arch,params_b", [
+    ("tinyllama-1.1b", 1.1), ("qwen2-0.5b", 0.49), ("granite-8b", 8.2),
+    ("stablelm-12b", 12.1), ("mamba2-2.7b", 2.8), ("recurrentgemma-9b", 9.6),
+    ("llama-3.2-vision-90b", 87.7), ("paper-llama-13b", 13.0),
+    ("paper-llama-33b", 32.5), ("paper-gpt3-175b", 175.2),
+])
+def test_param_counts_match_model_names(arch, params_b):
+    cfg = ARCHS[arch]()
+    assert abs(cfg.param_count() / 1e9 - params_b) / params_b < 0.12
+
+
+def test_exact_assigned_numbers():
+    c = ASSIGNED["llama4-maverick-400b-a17b"]()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == \
+        (48, 5120, 40, 8, 8192, 202048, 128, 1)
+    c = ASSIGNED["mamba2-2.7b"]()
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm_state) == \
+        (64, 2560, 50280, 128)
+    c = ASSIGNED["recurrentgemma-9b"]()
+    assert c.block_pattern == ("rglru", "rglru", "local_attn")
+    c = ASSIGNED["qwen2-0.5b"]()
+    assert c.qkv_bias and c.n_heads == 14 and c.n_kv_heads == 2
+    c = ASSIGNED["seamless-m4t-medium"]()
+    assert c.n_encoder_layers == 12 and c.family == "encdec"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_constraints(arch):
+    r = ASSIGNED[arch]().reduced()
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    if r.n_experts:
+        assert r.n_experts <= 4
+    assert r.family == ASSIGNED[arch]().family
+
+
+def test_swa_variant():
+    cfg = get_config("granite-8b", variant="swa")
+    assert cfg.sliding_window == 4096
+    assert cfg.supports_long_context
+    with pytest.raises(ValueError):
+        get_config("mamba2-2.7b", variant="swa")
+
+
+def test_moe_active_params():
+    c = ASSIGNED["llama4-maverick-400b-a17b"]()
+    assert c.active_param_count() < 0.05 * c.param_count()
+
+
+def test_long_context_support_flags():
+    assert ASSIGNED["mamba2-2.7b"]().supports_long_context
+    assert ASSIGNED["recurrentgemma-9b"]().supports_long_context
+    assert not ASSIGNED["tinyllama-1.1b"]().supports_long_context
+    assert not ASSIGNED["seamless-m4t-medium"]().supports_long_context

@@ -1,0 +1,82 @@
+"""Sharding-policy unit tests (no 512-device requirement: specs only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import shardings as sh
+from repro.models import stack
+
+
+def _pshapes(cfg):
+    import functools
+    return jax.eval_shape(
+        functools.partial(stack.init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+
+
+def test_llama4_expert_parallel_specs():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    specs = sh.param_pspecs(cfg, _pshapes(cfg))
+    lp = specs["groups"][0]
+    # experts over data (EP), expert d_ff over model (TP)
+    assert lp["ffn"]["w_gate"] == P(None, "data", None, "model")
+    assert lp["ffn"]["w_down"] == P(None, "data", "model", None)
+    assert lp["ffn"]["router"] == P(None, None, None)
+    assert specs["embed"] == P("model", None)
+
+
+def test_granite_moe_fallback_no_ep():
+    cfg = get_config("granite-moe-3b-a800m")     # 40 experts % 16 != 0
+    specs = sh.param_pspecs(cfg, _pshapes(cfg))
+    lp = specs["groups"][0]
+    assert lp["ffn"]["w_gate"] == P(None, None, None, "model")
+
+
+def test_vision_90b_uses_fsdp():
+    cfg = get_config("llama-3.2-vision-90b")
+    assert sh.use_fsdp(cfg)
+    specs = sh.param_pspecs(cfg, _pshapes(cfg))
+    dense_layer = specs["groups"][0]             # first of the 5-layer group
+    assert dense_layer["ffn"]["w_gate"] == P(None, "data", "model")
+    assert dense_layer["mixer"]["wo"] == P(None, "model", "data")
+
+
+def test_small_dense_tp_only():
+    cfg = get_config("tinyllama-1.1b")
+    assert not sh.use_fsdp(cfg)
+    specs = sh.param_pspecs(cfg, _pshapes(cfg))
+    lp = specs["groups"][0]
+    assert lp["ffn"]["w_gate"] == P(None, None, "model")
+    assert lp["mixer"]["wq"] == P(None, None, "model")
+    assert lp["ln1"] == P(None, None)    # (group axis, d) both replicated
+
+
+def test_non_divisible_vocab_replicates():
+    cfg = get_config("granite-moe-3b-a800m")     # vocab 49155 % 16 != 0
+    specs = sh.param_pspecs(cfg, _pshapes(cfg))
+    assert specs["embed"] == P(None, None)
+
+
+def test_shape_support_matrix():
+    ok, _ = sh.shape_supported(get_config("mamba2-2.7b"), "long_500k")
+    assert ok
+    ok, why = sh.shape_supported(get_config("stablelm-12b"), "long_500k")
+    assert not ok and "swa" in why
+    ok, _ = sh.shape_supported(get_config("stablelm-12b", variant="swa"),
+                               "long_500k")
+    assert ok
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for a in ASSIGNED:
+            ok, _ = sh.shape_supported(ASSIGNED[a](), s)
+            assert ok
+
+
+def test_input_shapes_exact():
+    assert sh.INPUT_SHAPES["train_4k"] == dict(seq_len=4096,
+                                               global_batch=256,
+                                               kind="train")
+    assert sh.INPUT_SHAPES["prefill_32k"]["global_batch"] == 32
+    assert sh.INPUT_SHAPES["decode_32k"]["global_batch"] == 128
+    assert sh.INPUT_SHAPES["long_500k"]["seq_len"] == 524288

@@ -1,0 +1,89 @@
+"""Analytical cost model + pipeline simulator vs the paper's own numbers."""
+import itertools
+
+import numpy as np
+import pytest
+
+import repro.scheduler.request as request_mod
+from repro.configs.paper_models import gpt3_175b, llama_13b
+from repro.scheduler import OrcaScheduler, Request, SarathiScheduler
+from repro.sim import (A100, A6000, BatchSpec, DecodeSeg, PrefillSeg,
+                       iteration_time, simulate_pipeline)
+
+
+def test_table2_prefill_only():
+    bd = iteration_time(llama_13b(), A6000,
+                        BatchSpec(prefills=(PrefillSeg(1024),)))
+    assert bd.linear * 1e3 == pytest.approx(224.8, rel=0.10)
+    assert bd.total * 1e3 == pytest.approx(234.8, rel=0.10)
+
+
+def test_table2_decode_only():
+    bd = iteration_time(llama_13b(), A6000,
+                        BatchSpec(decodes=(DecodeSeg(4, 1024),)))
+    assert bd.linear * 1e3 == pytest.approx(44.28, rel=0.10)
+    assert bd.total * 1e3 == pytest.approx(49.96, rel=0.15)
+
+
+def test_table2_decode_maximal():
+    bd_h = iteration_time(llama_13b(), A6000, BatchSpec(
+        prefills=(PrefillSeg(1021),), decodes=(DecodeSeg(3, 1024),)))
+    assert bd_h.total * 1e3 == pytest.approx(238.4, rel=0.10)
+    bd_p = iteration_time(llama_13b(), A6000,
+                          BatchSpec(prefills=(PrefillSeg(1024),)))
+    bd_d = iteration_time(llama_13b(), A6000,
+                          BatchSpec(decodes=(DecodeSeg(4, 1024),)))
+    marginal = (bd_h.total - bd_p.total) / 3
+    baseline = bd_d.total / 4
+    # paper: 12.49 -> 1.2 ms/token, ~10x; model reproduces the order of
+    # magnitude
+    assert baseline / marginal > 5
+
+
+def test_fused_faster_than_split():
+    """Weight reuse: a fused hybrid batch beats running the same segments
+    unfused (the core decode-piggyback effect)."""
+    # MXU/tile-aligned hybrid batch: 248 chunk + 8 decodes = 256 (§4.4)
+    spec = lambda fused: BatchSpec(prefills=(PrefillSeg(248),),
+                                   decodes=(DecodeSeg(8, 1024),),
+                                   fused=fused)
+    t_f = iteration_time(llama_13b(), A6000, spec(True)).total
+    t_s = iteration_time(llama_13b(), A6000, spec(False)).total
+    assert t_f < t_s * 0.80
+
+
+def test_ridge_points_match_paper():
+    # paper §5.1.2 quotes ~53 (A6000) vs ~156 (A100); the A100 number is
+    # tensor-peak / HBM-bw, which we match exactly.  (The paper's A6000
+    # figure uses a non-tensor peak; our A6000 profile is calibrated to
+    # Table 2 wall-clock instead — see repro/sim/hardware.py.)
+    assert A100.flops_per_byte == pytest.approx(156, rel=0.05)
+    assert A6000.flops_per_byte > A100.flops_per_byte
+
+
+def _workload(n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        z = rng.zipf(1.4)
+        plen = int(min(1024 * z, 4096))
+        reqs.append(Request(prompt=[1] * plen,
+                            max_new_tokens=max(plen // 10, 8)))
+    return reqs
+
+
+def test_pipeline_sarathi_reduces_bubbles():
+    cfg = gpt3_175b()
+    results = {}
+    from repro.core import quantized_chunk_size
+    for name, cls, chunk in [("orca", OrcaScheduler, 4096),
+                             ("sarathi", SarathiScheduler,
+                              quantized_chunk_size(256, 26))]:
+        request_mod._ids = itertools.count()
+        sched = cls(n_slots=216, max_decodes=26, chunk_size=chunk)
+        for r in _workload(300):
+            sched.submit(r)
+        results[name] = simulate_pipeline(cfg, A100, sched, pp=8, tp=8)
+    assert results["sarathi"].median_request_bubble < \
+        results["orca"].median_request_bubble / 2
+    assert results["sarathi"].makespan < results["orca"].makespan * 0.9

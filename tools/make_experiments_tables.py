@@ -1,0 +1,88 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src:. python tools/make_experiments_tables.py
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import model_flops, roofline_row, scan_correction
+
+GiB = 1 << 30
+MiB = 1 << 20
+
+
+def dryrun_table(path: str) -> str:
+    reps = json.loads(pathlib.Path(path).read_text())
+    lines = [
+        "| arch | shape | mesh | opt | compile s | args GiB/dev | "
+        "temp GiB/dev | HLO flops/dev | coll MiB/dev (AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reps:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"— | — | SKIP: quadratic attn at 500k (DESIGN.md) |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| FAILED | | | | | {r.get('error', '')[:60]} |")
+            continue
+        m = r["memory"]
+        cb = r["collective_bytes"]
+        coll = "/".join(
+            f"{cb[k] / MiB:.0f}"
+            for k in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('optimizer') or '—'} | {r['compile_s']:.0f} "
+            f"| {m['argument_bytes'] / GiB:.2f} "
+            f"| {m['temp_bytes'] / GiB:.2f} "
+            f"| {r['flops']:.2e} | {coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table(path: str) -> str:
+    reps = json.loads(pathlib.Path(path).read_text())
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | "
+        "dominant | useful-FLOP ratio | bound-vs-roofline note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reps:
+        if r.get("mesh") != "16x16":
+            continue
+        row = roofline_row(r)
+        if row is None:
+            continue
+        t = {"compute": row["compute_s"], "memory": row["memory_s"],
+             "collective": row["collective_s"]}
+        dom = row["dominant"]
+        second = sorted(t.values())[-2]
+        margin = t[dom] / max(second, 1e-12)
+        lines.append(
+            f"| {row['arch']} | {row['shape']} "
+            f"| {row['compute_s'] * 1e3:.2f} | {row['memory_s'] * 1e3:.2f} "
+            f"| {row['collective_s'] * 1e3:.2f} | **{dom}** "
+            f"| {row['useful_flops_ratio']:.2f} "
+            f"| {dom} term {margin:.1f}x the runner-up |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    out = []
+    p_all = "experiments/dryrun_all_optimized.json"
+    p_unr = "experiments/roofline_probe.json"
+    if pathlib.Path(p_all).exists():
+        out.append("## Dry-run grid — optimized shardings, both meshes "
+                   "(rolled artifacts; per-device memory)\n\n"
+                   + dryrun_table(p_all))
+    if pathlib.Path(p_unr).exists():
+        out.append("\n\n## Roofline (single pod, two-point unrolled layer "
+                   "probe)\n\n" + roofline_table(p_unr))
+    print("\n".join(out))

@@ -1,0 +1,110 @@
+"""Two-point layer probe for exact roofline terms (single pod).
+
+XLA's cost_analysis counts a lax.scan body ONCE, so the rolled artifact
+under-reports per-step FLOPs/bytes/collectives by ~the trip count.  Fully
+unrolling is exact but intractable to compile on this 1-core container for
+the deep configs.  Instead, for every (arch x shape) we compile the same
+step with n_layers = 1*period and 2*period:
+
+    body   = f(2p) - f(1p)          (one scan group's true cost)
+    total  = f(1p) + (n_groups - 1) * body  (+ tail approximated as
+             body * tail_len / period)
+
+which is exact for flops/bytes/collective-bytes because groups are
+identical.  Memory fit comes from the full rolled artifact (dryrun_all).
+
+    PYTHONPATH=src:. python tools/roofline_probe.py --json experiments/roofline_probe.json
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import shardings as sh
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_dryrun
+from repro.models.stack import group_split, stack_period
+
+
+def measure(cfg, shape, mesh):
+    # unroll the (1-2 group) probe scans so every layer is counted
+    os.environ["REPRO_SCAN_UNROLL"] = "1"
+    step, args, meta = build_dryrun(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(step, donate_argnums=meta.get("donate", ())) \
+            .lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll, _ = collective_bytes(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "coll": sum(coll.values())}
+
+
+def probe(arch: str, shape: str, variant: str = "") -> dict:
+    cfg = get_config(arch, variant=variant)
+    ok, why = sh.shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": why, "mesh": "16x16"}
+    mesh = make_production_mesh(multi_pod=False)
+    p = stack_period(cfg)
+    _, n_groups, tail = group_split(cfg)
+    t0 = time.time()
+    f1 = measure(dataclasses.replace(cfg, n_layers=p), shape, mesh)
+    f2 = measure(dataclasses.replace(cfg, n_layers=2 * p), shape, mesh)
+    eff_groups = n_groups + len(tail) / p
+    out = {"arch": arch, "shape": shape, "variant": variant,
+           "mesh": "16x16", "status": "ok", "n_groups": n_groups,
+           "probe_s": round(time.time() - t0, 1), "unrolled": True}
+    for k in ("flops", "bytes", "coll"):
+        body = max(f2[k] - f1[k], 0.0)
+        out[k] = f1[k] + body * (eff_groups - 1)
+    out["bytes_accessed"] = out.pop("bytes")
+    out["collective_bytes"] = {"all-reduce": out.pop("coll")}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="experiments/roofline_probe.json")
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else sorted(ASSIGNED)
+    reports = []
+    for arch in archs:
+        for shape in sorted(sh.INPUT_SHAPES):
+            try:
+                r = probe(arch, shape)
+                reports.append(r)
+                if r["status"] == "ok":
+                    print(f"[ ok ] {arch} x {shape} flops={r['flops']:.3e} "
+                          f"bytes={r['bytes_accessed']:.3e} "
+                          f"coll={sum(r['collective_bytes'].values()):.3e} "
+                          f"({r['probe_s']}s)", flush=True)
+                else:
+                    print(f"[skip] {arch} x {shape}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                reports.append({"arch": arch, "shape": shape,
+                                "status": "failed", "error": str(e)[:300]})
+            pathlib.Path(args.json).parent.mkdir(exist_ok=True, parents=True)
+            pathlib.Path(args.json).write_text(json.dumps(reports, indent=2))
+    n_ok = sum(r["status"] == "ok" for r in reports)
+    print(f"== probe: {n_ok} ok / {len(reports)} ==")
+
+
+if __name__ == "__main__":
+    main()
