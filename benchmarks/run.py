@@ -9,11 +9,94 @@
   simulator;
 * real CPU wall-clock of decode-maximal batching on a reduced model;
 * the roofline table from the dry-run artifacts (if present).
+
+``--capacity-search`` instead runs the online-serving capacity search:
+binary-search the highest Poisson arrival rate whose P99 TBT stays under
+an SLO (DistServe-style goodput capacity), using the cost-model-clocked
+online loop:
+
+    PYTHONPATH=src python -m benchmarks.run --capacity-search \
+        [--policy sarathi_serve] [--slo-tbt-ms 50] [--arch tinyllama-1.1b]
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
+
+
+def _tail_latencies(cfg, hw, policy: str, rate: float, *, n: int, chunk: int,
+                    slots: int, budget, seed: int):
+    """-> (p99_tbt, p99_ttft) at this arrival rate."""
+    from benchmarks.latency import ROW_FIELDS, sweep_policy
+    row, = sweep_policy(
+        cfg, hw, policy, [rate], n=n, chunk=chunk, slots=slots,
+        budget=budget, pd_ratio=8.0, min_len=128, max_len=1024, seed=seed)
+    return (row[ROW_FIELDS.index("p99_tbt")],
+            row[ROW_FIELDS.index("p99_ttft")])
+
+
+def capacity_search(args) -> None:
+    """Highest Poisson arrival rate meeting the latency SLOs.
+
+    A token-budget scheduler bounds TBT by construction, so under pure
+    overload the degradation shows up in TTFT / queueing — pass
+    ``--slo-ttft-ms`` (on top of the TBT SLO) to search for a
+    load-sensitive capacity.
+    """
+    from repro.configs import get_config
+    from repro.sim.hardware import PROFILES
+
+    cfg = get_config(args.arch)
+    hw = PROFILES[args.hw.lower()]
+    slo_tbt = args.slo_tbt_ms / 1e3
+    slo_ttft = args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None
+    kw = dict(n=args.n, chunk=args.chunk, slots=args.slots,
+              budget=args.budget, seed=args.seed)
+    memo = {}                          # rate -> (p99_tbt, p99_ttft)
+
+    def tails(rate: float):
+        if rate not in memo:
+            memo[rate] = _tail_latencies(cfg, hw, args.policy, rate, **kw)
+        return memo[rate]
+
+    def ok(rate: float) -> bool:
+        tbt, ttft = tails(rate)
+        return tbt <= slo_tbt and (slo_ttft is None or ttft <= slo_ttft)
+
+    print("policy,rate,p99_tbt_ms,p99_ttft_ms,slo_tbt_ms,slo_ttft_ms,"
+          "within_slo")
+    slo_ttft_s = f"{args.slo_ttft_ms:g}" if args.slo_ttft_ms else "-"
+    if ok(args.rate_start):
+        lo, hi = args.rate_start, args.rate_start * 2
+        # bracket: double until the SLO breaks (or give up at a huge rate)
+        while hi < 65536 and ok(hi):
+            lo, hi = hi, hi * 2
+        if ok(hi):                     # never broke: capacity >= the cap
+            lo = hi
+        else:
+            for _ in range(12):        # bisect to ~0.03% of the bracket
+                mid = (lo + hi) / 2
+                if ok(mid):
+                    lo = mid
+                else:
+                    hi = mid
+    else:                              # capacity (if any) is BELOW the start
+        lo, hi = 0.0, args.rate_start
+        for _ in range(12):
+            mid = (lo + hi) / 2
+            if ok(mid):
+                lo = mid
+            else:
+                hi = mid
+    if lo == 0.0:                      # SLO unmeetable at any probed rate
+        tbt, ttft = tails(args.rate_start)
+        print(f"{args.policy},0,{tbt * 1e3:.4g},{ttft * 1e3:.4g},"
+              f"{args.slo_tbt_ms:g},{slo_ttft_s},False")
+        return
+    tbt, ttft = tails(lo)
+    print(f"{args.policy},{lo:.4g},{tbt * 1e3:.4g},{ttft * 1e3:.4g},"
+          f"{args.slo_tbt_ms:g},{slo_ttft_s},True")
 
 
 def main() -> None:
@@ -49,4 +132,31 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    # allow_abbrev=False keeps the capacity-flag misuse guard below sound
+    # (abbreviated spellings would slip past the argv check)
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--capacity-search", action="store_true",
+                    help="online-serving capacity search instead of tables")
+    ap.add_argument("--policy", default="sarathi_serve")
+    ap.add_argument("--slo-tbt-ms", type=float, default=50.0)
+    ap.add_argument("--slo-ttft-ms", type=float, default=None)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--hw", default="a100-80gb")
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--chunk", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--rate-start", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    _args = ap.parse_args()
+    if _args.capacity_search:
+        capacity_search(_args)
+    else:
+        _used = {a.split("=")[0] for a in sys.argv[1:]} - {"--capacity-search"}
+        _cap_only = {"--policy", "--slo-tbt-ms", "--slo-ttft-ms", "--arch",
+                     "--hw", "--n", "--chunk", "--slots", "--budget",
+                     "--rate-start", "--seed"}
+        if _used & _cap_only:
+            ap.error(f"{sorted(_used & _cap_only)} only apply with "
+                     f"--capacity-search")
+        main()

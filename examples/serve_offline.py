@@ -4,6 +4,9 @@ correctness cross-checks and per-policy iteration statistics.
 
     PYTHONPATH=src python examples/serve_offline.py \
         [--arch tinyllama-1.1b] [--n 12] [--policy all] [--chunk 16]
+
+For ONLINE serving — timestamped arrivals, the token-budget sarathi_serve
+scheduler, and TTFT/TBT percentile metrics — see examples/serve_online.py.
 """
 import argparse
 import time

@@ -19,7 +19,7 @@ balanced by construction.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -65,19 +65,45 @@ class DecodeWork:
     ctx: int                    # current context length
 
 
-@dataclass
 class IterationPlan:
-    """One engine iteration, as constructed by a scheduler policy."""
-    chunk: Optional[ChunkWork] = None
-    decodes: List[DecodeWork] = field(default_factory=list)
+    """One engine iteration, as constructed by a scheduler policy.
+
+    Historically a plan carried at most ONE prefill chunk (SARATHI's
+    decode-maximal batch).  Token-budget policies (Sarathi-Serve style) may
+    pack SEVERAL chunks from different requests into one iteration, so the
+    plan now holds a ``chunks`` list; ``chunk`` remains the single-chunk
+    view used by the original policies and the packed engine step.
+    """
+
+    def __init__(self, chunk: Optional[ChunkWork] = None,
+                 decodes: Optional[List[DecodeWork]] = None,
+                 chunks: Optional[Sequence[ChunkWork]] = None):
+        if chunk is not None and chunks:
+            raise ValueError("pass either chunk= or chunks=, not both")
+        self.chunks: List[ChunkWork] = (
+            list(chunks) if chunks else ([chunk] if chunk is not None else []))
+        self.decodes: List[DecodeWork] = list(decodes) if decodes else []
+
+    @property
+    def chunk(self) -> Optional[ChunkWork]:
+        """The plan's first (for the original policies: only) chunk."""
+        return self.chunks[0] if self.chunks else None
+
+    @chunk.setter
+    def chunk(self, work: Optional[ChunkWork]):
+        self.chunks = [work] if work is not None else []
 
     @property
     def n_prefill_tokens(self) -> int:
-        return len(self.chunk.tokens) if self.chunk else 0
+        return sum(len(c.tokens) for c in self.chunks)
 
     @property
     def n_decode_tokens(self) -> int:
         return len(self.decodes)
+
+    def __repr__(self) -> str:                       # pragma: no cover
+        return (f"IterationPlan(chunks={self.chunks!r}, "
+                f"decodes={self.decodes!r})")
 
 
 class Engine:
@@ -149,25 +175,51 @@ class Engine:
 
     def execute(self, plan: IterationPlan) -> Dict[int, int]:
         """Run one iteration; returns {req_id: newly sampled token} for the
-        requests that produced a token this iteration."""
+        requests that produced a token this iteration.
+
+        The compiled step is single-chunk (static shape ``(C, D)``); a
+        multi-chunk plan is executed as consecutive packed sub-steps — the
+        first carries all piggybacked decodes, the rest are chunk-only —
+        so schedulers can fill a token budget larger than C without
+        changing the engine contract.
+        """
         if len(plan.decodes) > self.D:
             raise ValueError(f"plan has {len(plan.decodes)} decodes > D={self.D}")
-        if plan.chunk and len(plan.chunk.tokens) > self.C:
-            raise ValueError("chunk longer than engine chunk size")
+        for c in plan.chunks:
+            if len(c.tokens) > self.C:
+                raise ValueError("chunk longer than engine chunk size")
 
+        out: Dict[int, int] = {}
+        chunks: List[Optional[ChunkWork]] = list(plan.chunks) or [None]
+        for i, chunk in enumerate(chunks):
+            out.update(self._execute_packed(
+                chunk, plan.decodes if i == 0 else []))
+        return out
+
+    def warmup(self):
+        """Compile the packed step (scratch chunk row, no decodes — the same
+        static shape as every real iteration) WITHOUT consuming PRNG or
+        iteration state, so a warmed engine replays a cold one exactly even
+        under stochastic sampling."""
+        key, n = self._key, self.iterations
+        self._execute_packed(None, [])
+        self._key, self.iterations = key, n
+
+    def _execute_packed(self, chunk: Optional[ChunkWork],
+                        decodes: Sequence[DecodeWork]) -> Dict[int, int]:
         ct = np.zeros((self.C,), np.int32)
-        if plan.chunk:
-            ct[:len(plan.chunk.tokens)] = plan.chunk.tokens
-            c_slot = self._slot_of[plan.chunk.req_id]
-            c_start = plan.chunk.start
-            c_len = len(plan.chunk.tokens)
+        if chunk:
+            ct[:len(chunk.tokens)] = chunk.tokens
+            c_slot = self._slot_of[chunk.req_id]
+            c_start = chunk.start
+            c_len = len(chunk.tokens)
         else:
             c_slot, c_start, c_len = self.scratch, 0, 0
 
         dt = np.zeros((self.D,), np.int32)
         ds = np.full((self.D,), self.scratch, np.int32)
         dc = np.zeros((self.D,), np.int32)
-        for i, w in enumerate(plan.decodes):
+        for i, w in enumerate(decodes):
             dt[i] = w.token
             ds[i] = self._slot_of[w.req_id]
             dc[i] = w.ctx
@@ -184,10 +236,10 @@ class Engine:
         self.iterations += 1
 
         out: Dict[int, int] = {}
-        if plan.chunk and plan.chunk.is_last and chunk_tok is not None:
-            out[plan.chunk.req_id] = int(chunk_tok)
+        if chunk and chunk.is_last and chunk_tok is not None:
+            out[chunk.req_id] = int(chunk_tok)
         if dec_tok is not None:
             dec_tok = np.asarray(dec_tok)
-            for i, w in enumerate(plan.decodes):
+            for i, w in enumerate(decodes):
                 out[w.req_id] = int(dec_tok[i])
         return out

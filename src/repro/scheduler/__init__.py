@@ -2,6 +2,9 @@ from repro.scheduler.request import Request, State
 from repro.scheduler.policies import (POLICIES, OrcaScheduler,
                                       RequestLevelScheduler, SarathiScheduler,
                                       Scheduler)
+from repro.scheduler.budget import (BUDGETED_POLICIES, CHUNKED_POLICIES,
+                                    SarathiServeScheduler)
 
 __all__ = ["Request", "State", "Scheduler", "SarathiScheduler",
-           "OrcaScheduler", "RequestLevelScheduler", "POLICIES"]
+           "OrcaScheduler", "RequestLevelScheduler", "SarathiServeScheduler",
+           "POLICIES", "CHUNKED_POLICIES", "BUDGETED_POLICIES"]

@@ -1,0 +1,125 @@
+"""Token-budget batch composition (Sarathi-Serve, arXiv 2403.02310).
+
+The offline :class:`~repro.scheduler.policies.SarathiScheduler` maximises
+throughput: one chunk + as many piggybacked decodes as fit.  Online serving
+instead needs a *latency* contract: every iteration must finish within a
+bounded time so running decodes never stall behind a long prefill.  The
+Sarathi-Serve insight is that the chunked-prefill machinery already gives
+the control knob — compose each iteration under a fixed TOKEN BUDGET:
+
+1. decodes first — every running decode-phase request gets its token
+   (decodes are never evicted or displaced by prefill work);
+2. the remaining budget is filled with prefill chunks, FCFS over the
+   prefilling requests, each chunk sized ``min(chunk_size, budget_left,
+   prefill_remaining)`` — so a single iteration may carry SEVERAL chunks
+   from different requests (multi-chunk :class:`IterationPlan`);
+3. admission is FCFS, gated on arrival time (a request that has not
+   arrived yet by the loop's clock stays queued), with slot-pressure
+   backoff: while the decode slots are saturated, new requests are not
+   admitted (their prefills would inflate tail TBT without any decode
+   capacity to serve them).
+
+Because the budget bounds per-iteration work and decodes ride along every
+iteration, inter-token latency is flat ("stall-free") regardless of how
+long the co-running prompts are.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.engine import DecodeWork, IterationPlan
+from repro.scheduler.policies import POLICIES, Scheduler
+from repro.scheduler.request import State
+
+
+class SarathiServeScheduler(Scheduler):
+    """Stall-free token-budget scheduling for online continuous serving.
+
+    Parameters
+    ----------
+    token_budget:
+        Per-iteration cap on prefill + decode tokens.  Defaults to
+        ``chunk_size + max_decodes`` — the exact footprint of the offline
+        SARATHI hybrid batch, so with ``max_chunks_per_iter=1`` and
+        ``admit_backoff=False`` this policy replays ``SarathiScheduler``
+        plan-for-plan (the deterministic-replay test relies on this).
+    max_chunks_per_iter:
+        Optional cap on prefill chunks per iteration (None = fill the
+        budget with as many chunks as fit).
+    admit_backoff:
+        Slot-pressure backoff: hold admissions while ``max_decodes``
+        requests are already in decode phase.
+    """
+
+    supports_time = True            # next_plan() accepts now= for gating
+
+    def __init__(self, *, n_slots: int, max_decodes: int, chunk_size: int,
+                 token_budget: Optional[int] = None,
+                 max_chunks_per_iter: Optional[int] = None,
+                 admit_backoff: bool = True):
+        super().__init__(n_slots=n_slots, max_decodes=max_decodes,
+                         chunk_size=chunk_size)
+        self.token_budget = int(token_budget if token_budget is not None
+                                else chunk_size + max_decodes)
+        if self.token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
+        self.max_chunks_per_iter = max_chunks_per_iter
+        self.admit_backoff = admit_backoff
+
+    # ------------------------------------------------------------- intake
+    def _admit(self, admit_hook=None, now: Optional[float] = None):
+        if self.admit_backoff:
+            n_dec = sum(1 for r in self.running if r.state == State.DECODING)
+            if n_dec >= self.max_decodes:
+                return
+        while self.waiting and len(self.running) < self.n_slots:
+            req = self.waiting[0]
+            # FCFS: a not-yet-arrived head blocks later arrivals too
+            if now is not None and req.arrival_time > now:
+                break
+            self.waiting.popleft()
+            req.state = State.PREFILLING
+            self.running.append(req)
+            if admit_hook:
+                admit_hook(req)
+
+    # ------------------------------------------------------------- policy
+    def next_plan(self, admit_hook=None,
+                  now: Optional[float] = None) -> Optional[IterationPlan]:
+        self._admit(admit_hook, now)
+        if not self.running:
+            return None
+        self.iteration += 1
+        plan = IterationPlan()
+        budget = self.token_budget
+        # 1) decodes first — never displaced by prefill
+        decoding = [r for r in self.running if r.state == State.DECODING]
+        for r in decoding[: min(self.max_decodes, budget)]:
+            plan.decodes.append(DecodeWork(r.req_id, r.last_token,
+                                           r.decode_position))
+            budget -= 1
+        # 2) fill the remainder with FCFS prefill chunks
+        prefilling = [r for r in self.running if r.state == State.PREFILLING
+                      and r.prefill_remaining > 0]
+        for r in prefilling:
+            if budget <= 0:
+                break
+            if (self.max_chunks_per_iter is not None
+                    and len(plan.chunks) >= self.max_chunks_per_iter):
+                break
+            n = min(self.chunk_size, budget, r.prefill_remaining)
+            plan.chunks.append(self._take_chunk(r, n))
+            budget -= n
+        if not plan.chunks and not plan.decodes:
+            return None
+        return plan
+
+
+POLICIES["sarathi_serve"] = SarathiServeScheduler
+
+# policies whose engine compiles with C = chunk_size (the rest submit whole
+# prompts as one 'chunk' and need C = max prompt length)
+CHUNKED_POLICIES = frozenset({"sarathi", "sarathi_serve"})
+
+# policies whose constructor takes a token_budget
+BUDGETED_POLICIES = frozenset({"sarathi_serve"})

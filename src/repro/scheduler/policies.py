@@ -65,6 +65,18 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    def _take_chunk(self, req: Request, n: int) -> ChunkWork:
+        """Cut the next ``n``-token prefill chunk off ``req`` and advance
+        its lifecycle (prefilled counter, PREFILLING -> DECODING on the
+        last chunk)."""
+        toks = list(req.prompt[req.prefilled: req.prefilled + n])
+        chunk = ChunkWork(req.req_id, toks, req.prefilled,
+                          is_last=(n == req.prefill_remaining))
+        req.prefilled += n
+        if req.prefill_remaining == 0:
+            req.state = State.DECODING
+        return chunk
+
     # ------------------------------------------------------------- policy
     def next_plan(self, admit_hook=None) -> Optional[IterationPlan]:
         raise NotImplementedError
@@ -89,14 +101,8 @@ class SarathiScheduler(Scheduler):
                       and r.prefill_remaining > 0]
         if prefilling:
             r = prefilling[0]
-            n = min(self.chunk_size, r.prefill_remaining)
-            toks = list(r.prompt[r.prefilled: r.prefilled + n])
-            chunk = ChunkWork(r.req_id, toks, r.prefilled,
-                              is_last=(n == r.prefill_remaining))
-            r.prefilled += n
-            if r.prefill_remaining == 0:
-                r.state = State.DECODING
-            plan.chunk = chunk
+            plan.chunk = self._take_chunk(
+                r, min(self.chunk_size, r.prefill_remaining))
         if plan.chunk is None and not plan.decodes:
             return None
         return plan
@@ -121,10 +127,7 @@ class OrcaScheduler(Scheduler):
                       and r.prefill_remaining > 0]
         if prefilling:
             r = prefilling[0]
-            toks = list(r.prompt)                 # the ENTIRE prompt at once
-            plan.chunk = ChunkWork(r.req_id, toks, 0, is_last=True)
-            r.prefilled = r.prompt_len
-            r.state = State.DECODING
+            plan.chunk = self._take_chunk(r, r.prefill_remaining)  # ENTIRE prompt
         if plan.chunk is None and not plan.decodes:
             return None
         return plan
@@ -145,11 +148,8 @@ class RequestLevelScheduler(Scheduler):
         prefilling = [r for r in self.running if r.state == State.PREFILLING
                       and r.prefill_remaining > 0]
         if prefilling:                        # prefill phase: one at a time
-            r = prefilling[0]
-            toks = list(r.prompt)
-            plan.chunk = ChunkWork(r.req_id, toks, 0, is_last=True)
-            r.prefilled = r.prompt_len
-            r.state = State.DECODING
+            plan.chunk = self._take_chunk(prefilling[0],
+                                          prefilling[0].prefill_remaining)
             return plan
         for r in self.running[: self.max_decodes]:
             plan.decodes.append(DecodeWork(r.req_id, r.last_token,

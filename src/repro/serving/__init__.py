@@ -1,3 +1,18 @@
 from repro.serving.server import IterationStats, Server, ServeResult
+from repro.serving.online import (CostModelExecutor, EngineExecutor,
+                                  IterationRecord, OnlineResult, OnlineServer,
+                                  serve_online)
+from repro.serving.metrics import (RequestTrace, ServingSummary, Stat,
+                                   format_table, percentile, summarize)
+from repro.serving.workload import (online_workload, poisson_arrivals,
+                                    trace_arrivals, uniform_arrivals)
 
-__all__ = ["Server", "ServeResult", "IterationStats"]
+__all__ = [
+    "Server", "ServeResult", "IterationStats",
+    "OnlineServer", "OnlineResult", "IterationRecord", "serve_online",
+    "EngineExecutor", "CostModelExecutor",
+    "RequestTrace", "ServingSummary", "Stat", "percentile", "summarize",
+    "format_table",
+    "online_workload", "poisson_arrivals", "uniform_arrivals",
+    "trace_arrivals",
+]

@@ -1,0 +1,145 @@
+"""Online-serving latency metrics (DistServe, arXiv 2401.09670 framing).
+
+Per request we record the event times the loop observes — arrival, first
+time any of its work ran, every generated-token completion, finish — and
+derive the three latencies that define serving goodput:
+
+* **TTFT** — time to first token, ``first token time - arrival``;
+* **TBT / ITL** — time between tokens: gaps between consecutive token
+  completions of one request (the stall metric SARATHI-style budget
+  scheduling bounds);
+* **queueing delay** — ``first scheduled - arrival`` (pure admission wait).
+
+Percentiles use linear interpolation between order statistics (numpy's
+default), which degrades sanely for the edge cases the tests pin down:
+a single sample returns itself for every percentile, and ties collapse.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """q-th percentile (0..100), linear interpolation between ranks."""
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} outside [0, 100]")
+    v = sorted(values)
+    if not v:
+        raise ValueError("percentile of empty sequence")
+    if len(v) == 1:
+        return float(v[0])
+    rank = (len(v) - 1) * (q / 100.0)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    return float(v[lo] + (v[hi] - v[lo]) * (rank - lo))
+
+
+@dataclass
+class RequestTrace:
+    """Event times for one request, as observed by the serving loop."""
+    req_id: int
+    arrival: float
+    scheduled: Optional[float] = None       # first time any work ran
+    finish: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+
+    def mark_scheduled(self, t: float):
+        if self.scheduled is None:
+            self.scheduled = t
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return self.token_times[0] - self.arrival if self.token_times else None
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        return None if self.scheduled is None else self.scheduled - self.arrival
+
+    @property
+    def tbts(self) -> List[float]:
+        """Inter-token gaps (empty until the 2nd token lands)."""
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+    @property
+    def e2e(self) -> Optional[float]:
+        return None if self.finish is None else self.finish - self.arrival
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.token_times)
+
+
+@dataclass(frozen=True)
+class Stat:
+    """Summary statistics of one latency distribution."""
+    n: int
+    mean: float
+    p50: float
+    p90: float
+    p99: float
+    max: float
+
+    @staticmethod
+    def of(values: Sequence[float]) -> "Stat":
+        if not values:
+            return Stat(0, float("nan"), float("nan"), float("nan"),
+                        float("nan"), float("nan"))
+        return Stat(len(values), sum(values) / len(values),
+                    percentile(values, 50), percentile(values, 90),
+                    percentile(values, 99), max(values))
+
+
+@dataclass(frozen=True)
+class ServingSummary:
+    n_requests: int
+    n_tokens: int
+    makespan: float
+    ttft: Stat
+    tbt: Stat
+    queue_delay: Stat
+    e2e: Stat
+
+    @property
+    def throughput(self) -> float:
+        """Generated tokens per second of serving time."""
+        return self.n_tokens / self.makespan if self.makespan > 0 else 0.0
+
+
+def summarize(traces: Iterable[RequestTrace],
+              makespan: Optional[float] = None) -> ServingSummary:
+    traces = list(traces)
+    ttfts = [t.ttft for t in traces if t.ttft is not None]
+    tbts = [g for t in traces for g in t.tbts]
+    queues = [t.queue_delay for t in traces if t.queue_delay is not None]
+    e2es = [t.e2e for t in traces if t.e2e is not None]
+    n_tokens = sum(t.n_tokens for t in traces)
+    if makespan is None:
+        ends = [t.token_times[-1] for t in traces if t.token_times]
+        makespan = max(ends) - min(t.arrival for t in traces) \
+            if ends and traces else 0.0
+    return ServingSummary(
+        n_requests=len(traces), n_tokens=n_tokens, makespan=makespan,
+        ttft=Stat.of(ttfts), tbt=Stat.of(tbts),
+        queue_delay=Stat.of(queues), e2e=Stat.of(e2es))
+
+
+def format_table(s: ServingSummary, unit: str = "s") -> str:
+    """Human-readable metrics table (the example / benchmark output)."""
+    scale = {"s": 1.0, "ms": 1e3, "us": 1e6}[unit]
+    rows = [("ttft", s.ttft), ("tbt", s.tbt),
+            ("queue_delay", s.queue_delay), ("e2e", s.e2e)]
+    out = [f"requests={s.n_requests} tokens={s.n_tokens} "
+           f"makespan={s.makespan:.3f}s throughput={s.throughput:.1f} tok/s",
+           f"{'metric':<12s} {'n':>5s} {'mean':>9s} {'p50':>9s} "
+           f"{'p90':>9s} {'p99':>9s} {'max':>9s}   [{unit}]"]
+    for name, st in rows:
+        if st.n == 0:
+            out.append(f"{name:<12s} {0:>5d} {'-':>9s} {'-':>9s} "
+                       f"{'-':>9s} {'-':>9s} {'-':>9s}")
+            continue
+        out.append(f"{name:<12s} {st.n:>5d} {st.mean * scale:>9.3f} "
+                   f"{st.p50 * scale:>9.3f} {st.p90 * scale:>9.3f} "
+                   f"{st.p99 * scale:>9.3f} {st.max * scale:>9.3f}")
+    return "\n".join(out)

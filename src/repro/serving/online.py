@@ -1,0 +1,204 @@
+"""Online continuous serving: arrival-driven event loop over the engine.
+
+The offline :class:`repro.serving.Server` drains a static request list with
+no notion of time; this module adds the serving dimension.  The loop keeps
+a virtual clock, releases requests into the scheduler as they *arrive*,
+executes one scheduler-composed iteration at a time, and advances the
+clock by the iteration's duration — so per-request TTFT / TBT / queueing
+delay fall out of the event times (:mod:`repro.serving.metrics`).
+
+The iteration duration comes from a pluggable **executor**:
+
+* :class:`EngineExecutor` — the real jit-compiled engine; duration is
+  measured wall-clock (what ``examples/serve_online.py`` demonstrates);
+* :class:`CostModelExecutor` — the §5.3 analytical cost model; duration is
+  the modelled iteration time on a target :class:`~repro.sim.Hardware`,
+  which makes throughput-vs-latency sweeps (``benchmarks/latency.py``) and
+  capacity search run in milliseconds on CPU.
+
+Both share one loop, so the budget scheduler's behaviour is identical in
+measurement and simulation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import Engine, IterationPlan
+from repro.core.sampling import SamplingParams
+from repro.scheduler import Request, Scheduler
+from repro.serving.metrics import RequestTrace, ServingSummary, summarize
+
+
+# --------------------------------------------------------------------------
+# executors
+# --------------------------------------------------------------------------
+class EngineExecutor:
+    """Run plans on the real engine; duration = measured wall time."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+
+    def admit(self, req: Request):
+        self.engine.add_request(req.req_id, memory=req.memory)
+
+    def release(self, req: Request):
+        self.engine.release(req.req_id)
+
+    def warmup(self):
+        """Compile the packed step off the clock; PRNG/iteration state is
+        preserved so warmed and cold engines replay identically."""
+        self.engine.warmup()
+
+    def __call__(self, plan: IterationPlan) -> Tuple[Dict[int, int], float]:
+        t0 = time.perf_counter()
+        tokens = self.engine.execute(plan)
+        return tokens, time.perf_counter() - t0
+
+
+class CostModelExecutor:
+    """Time plans with the analytical cost model; tokens are synthetic
+    (content-independent timing, like the pipeline simulator).
+
+    Timing mirrors :meth:`Engine.execute` exactly: a multi-chunk plan is
+    costed as consecutive packed sub-steps (first chunk fused with all
+    decodes, remaining chunks alone), each paying its own weight fetch —
+    not as one big fused batch — so simulated iteration times track what
+    the real engine would measure.
+    """
+
+    def __init__(self, cfg: ModelConfig, hw, *, n_chips: int = 1,
+                 fused: bool = True):
+        self.cfg = cfg
+        self.hw = hw
+        self.n_chips = n_chips
+        self.fused = fused
+
+    def admit(self, req: Request):
+        pass
+
+    def release(self, req: Request):
+        pass
+
+    def warmup(self):
+        pass
+
+    def __call__(self, plan: IterationPlan) -> Tuple[Dict[int, int], float]:
+        from repro.sim.pipeline import plan_time
+        dt = plan_time(self.cfg, self.hw, plan, n_chips=self.n_chips,
+                       fused=self.fused)
+        tokens = {c.req_id: 1 for c in plan.chunks if c.is_last}
+        tokens.update({d.req_id: 1 for d in plan.decodes})
+        return tokens, dt
+
+
+# --------------------------------------------------------------------------
+# the event loop
+# --------------------------------------------------------------------------
+@dataclass
+class IterationRecord:
+    t_start: float
+    duration: float
+    n_prefill_tokens: int
+    n_decode_tokens: int
+
+
+@dataclass
+class OnlineResult:
+    traces: Dict[int, RequestTrace]
+    outputs: Dict[int, List[int]]
+    iterations: List[IterationRecord] = field(default_factory=list)
+    makespan: float = 0.0
+
+    def summary(self) -> ServingSummary:
+        return summarize(self.traces.values(), makespan=self.makespan)
+
+
+def serve_online(scheduler: Scheduler, executor,
+                 requests: Sequence[Request], *,
+                 max_iterations: int = 1_000_000) -> OnlineResult:
+    """Drive timestamped requests through ``scheduler`` + ``executor``.
+
+    The clock starts at 0, jumps forward over idle gaps (to the next
+    arrival), and advances by each iteration's duration.  Schedulers that
+    set ``supports_time`` get the clock passed as ``now=`` so they can gate
+    admission on arrival themselves; for the rest the loop withholds
+    not-yet-arrived requests.
+    """
+    pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
+    traces = {r.req_id: RequestTrace(r.req_id, r.arrival_time)
+              for r in requests}
+    result = OnlineResult(traces=traces, outputs={})
+    clock = 0.0
+    passes_now = getattr(scheduler, "supports_time", False)
+
+    def release(req: Request):
+        executor.release(req)
+        traces[req.req_id].finish = clock
+        result.outputs[req.req_id] = list(req.output)
+
+    for _ in range(max_iterations):
+        while pending and pending[0].arrival_time <= clock:
+            scheduler.submit(pending.pop(0))
+        if not pending and not scheduler.has_work:
+            break
+        kwargs = {"now": clock} if passes_now else {}
+        plan = scheduler.next_plan(admit_hook=executor.admit, **kwargs)
+        if plan is None:
+            if pending:
+                clock = max(clock, pending[0].arrival_time)
+                continue
+            if scheduler.has_work:          # pragma: no cover - safety net
+                raise RuntimeError("scheduler stalled with work queued")
+            break
+        t0 = clock
+        tokens, dt = executor(plan)
+        clock = t0 + dt
+        for c in plan.chunks:
+            traces[c.req_id].mark_scheduled(t0)
+        for d in plan.decodes:
+            traces[d.req_id].mark_scheduled(t0)
+        for rid in tokens:
+            traces[rid].token_times.append(clock)
+        result.iterations.append(IterationRecord(
+            t0, dt, plan.n_prefill_tokens, plan.n_decode_tokens))
+        scheduler.on_tokens(tokens, release_hook=release)
+    result.makespan = clock
+    return result
+
+
+# --------------------------------------------------------------------------
+# convenience wrapper: real engine + budget scheduler
+# --------------------------------------------------------------------------
+class OnlineServer:
+    """Online counterpart of :class:`repro.serving.Server`: same engine,
+    arrival-driven loop, latency metrics.  Default policy is the
+    token-budget ``sarathi_serve`` scheduler."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 policy: str = "sarathi_serve", chunk_size: int = 256,
+                 n_slots: int = 8, max_len: int = 4096,
+                 max_prompt_len: Optional[int] = None,
+                 token_budget: Optional[int] = None, dtype=jnp.float32,
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0,
+                 policy_kwargs: Optional[dict] = None):
+        from repro.serving.server import build_engine_and_scheduler
+        self.cfg = cfg
+        self.policy_name = policy
+        self.engine, self.scheduler = build_engine_and_scheduler(
+            cfg, params, policy=policy, chunk_size=chunk_size,
+            n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
+            token_budget=token_budget, dtype=dtype, sampling=sampling,
+            seed=seed, policy_kwargs=policy_kwargs)
+        self.executor = EngineExecutor(self.engine)
+
+    def run(self, requests: Sequence[Request], *, warmup: bool = True,
+            max_iterations: int = 1_000_000) -> OnlineResult:
+        if warmup:
+            self.executor.warmup()          # compile off the clock
+        return serve_online(self.scheduler, self.executor, requests,
+                            max_iterations=max_iterations)

@@ -15,7 +15,49 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.engine import Engine
 from repro.core.sampling import SamplingParams
-from repro.scheduler import POLICIES, Request
+from repro.scheduler import (BUDGETED_POLICIES, CHUNKED_POLICIES, POLICIES,
+                             Request)
+
+
+def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
+                               chunk_size: int, n_slots: int, max_len: int,
+                               max_prompt_len: Optional[int] = None,
+                               token_budget: Optional[int] = None,
+                               dtype=jnp.float32,
+                               sampling: SamplingParams = SamplingParams(),
+                               seed: int = 0,
+                               policy_kwargs: Optional[dict] = None):
+    """Shared construction for the offline Server and OnlineServer.
+
+    Orca / request-level submit whole prompts as one 'chunk', so their
+    engines compile with C = max prompt length; chunked policies compile
+    with C = chunk_size.
+    """
+    if policy not in POLICIES:
+        raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
+    engine_chunk = chunk_size if policy in CHUNKED_POLICIES else \
+        (max_prompt_len or max_len)
+    engine = Engine(cfg, params, n_slots=n_slots, max_len=max_len,
+                    chunk_size=engine_chunk,
+                    decode_slots=max(n_slots - 1, 1), dtype=dtype,
+                    sampling=sampling, seed=seed)
+    kw = dict(n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
+              chunk_size=chunk_size)
+    if token_budget is not None:
+        if policy not in BUDGETED_POLICIES:
+            raise ValueError(f"token_budget is only supported by "
+                             f"{sorted(BUDGETED_POLICIES)}, not {policy!r}")
+        kw["token_budget"] = token_budget
+    if policy_kwargs:
+        # geometry the engine was just compiled with (and token_budget,
+        # which is policy-gated above) must come through the named args
+        reserved = kw.keys() & policy_kwargs.keys()
+        if reserved:
+            raise ValueError(f"policy_kwargs may not override "
+                             f"{sorted(reserved)}; pass them as top-level "
+                             f"arguments")
+        kw.update(policy_kwargs)
+    return engine, POLICIES[policy](**kw)
 
 
 @dataclass
@@ -42,23 +84,15 @@ class Server:
     def __init__(self, cfg: ModelConfig, params, *, policy: str = "sarathi",
                  chunk_size: int = 256, n_slots: int = 8,
                  max_len: int = 4096, max_prompt_len: Optional[int] = None,
-                 dtype=jnp.float32,
+                 token_budget: Optional[int] = None, dtype=jnp.float32,
                  sampling: SamplingParams = SamplingParams(), seed: int = 0):
-        if policy not in POLICIES:
-            raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
         self.cfg = cfg
         self.policy_name = policy
-        # Orca / request-level submit whole prompts as one 'chunk', so their
-        # engines compile with C = max prompt length.
-        engine_chunk = chunk_size if policy == "sarathi" else \
-            (max_prompt_len or max_len)
-        self.engine = Engine(cfg, params, n_slots=n_slots, max_len=max_len,
-                             chunk_size=engine_chunk,
-                             decode_slots=max(n_slots - 1, 1), dtype=dtype,
-                             sampling=sampling, seed=seed)
-        self.scheduler = POLICIES[policy](
-            n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
-            chunk_size=chunk_size)
+        self.engine, self.scheduler = build_engine_and_scheduler(
+            cfg, params, policy=policy, chunk_size=chunk_size,
+            n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
+            token_budget=token_budget, dtype=dtype, sampling=sampling,
+            seed=seed)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 100_000) -> ServeResult:

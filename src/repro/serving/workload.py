@@ -1,0 +1,70 @@
+"""Timestamped request workloads for online serving.
+
+Couples the paper's §5.3 request-shape distribution (Zipf lengths, fixed
+P:D split — :func:`repro.data.serving_workload`) with an arrival process:
+
+* ``poisson`` — open-loop Poisson arrivals at ``rate`` req/s (the standard
+  serving-benchmark assumption; exponential inter-arrival gaps);
+* ``uniform`` — deterministic, evenly spaced at ``rate`` req/s;
+* an explicit trace of arrival times (replay of a recorded workload).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data import serving_workload
+from repro.scheduler.request import Request
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """n arrival times with Exp(1/rate) inter-arrival gaps (open loop)."""
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def uniform_arrivals(n: int, rate: float) -> np.ndarray:
+    """n deterministic arrivals evenly spaced at ``rate`` req/s."""
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    return np.arange(n, dtype=np.float64) / rate
+
+
+def trace_arrivals(times: Sequence[float]) -> np.ndarray:
+    """Validate and normalise an explicit arrival-time trace."""
+    t = np.asarray(times, dtype=np.float64)
+    if t.ndim != 1:
+        raise ValueError("trace must be 1-D")
+    if len(t) and (np.any(t < 0) or np.any(np.diff(t) < 0)):
+        raise ValueError("trace times must be non-negative and sorted")
+    return t
+
+
+def online_workload(n_requests: int, *, rate: float = 1.0,
+                    arrival: str = "poisson",
+                    trace: Optional[Sequence[float]] = None,
+                    pd_ratio: float = 8.0, min_len: int = 16,
+                    max_len: int = 64, theta: float = 0.4,
+                    vocab_size: int = 32000, seed: int = 0,
+                    eos_token: Optional[int] = None) -> List[Request]:
+    """Timestamped requests: paper-shaped prompts + an arrival process."""
+    if trace is not None:
+        times = trace_arrivals(trace)
+        if len(times) != n_requests:
+            raise ValueError(f"trace has {len(times)} times for "
+                             f"{n_requests} requests")
+    elif arrival == "poisson":
+        times = poisson_arrivals(n_requests, rate, seed=seed)
+    elif arrival == "uniform":
+        times = uniform_arrivals(n_requests, rate)
+    else:
+        raise ValueError(f"unknown arrival process {arrival!r}")
+    shapes = serving_workload(n_requests, pd_ratio=pd_ratio, min_len=min_len,
+                              max_len=max_len, theta=theta, seed=seed,
+                              vocab_size=vocab_size)
+    return [Request(prompt=p, max_new_tokens=d, arrival_time=float(t),
+                    eos_token=eos_token)
+            for (p, d), t in zip(shapes, times)]

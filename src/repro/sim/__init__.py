@@ -3,11 +3,12 @@ from repro.sim.cost_model import (BatchSpec, CostBreakdown, DecodeSeg,
                                   PrefillSeg, chunked_prefill_total,
                                   decode_time, hybrid_time, iteration_time,
                                   prefill_time)
-from repro.sim.pipeline import PipelineResult, plan_to_spec, simulate_pipeline
+from repro.sim.pipeline import (PipelineResult, plan_time, plan_to_spec,
+                                simulate_pipeline)
 
 __all__ = [
     "Hardware", "A6000", "A100", "TPU_V5E", "PROFILES", "BatchSpec",
     "PrefillSeg", "DecodeSeg", "CostBreakdown", "iteration_time",
     "prefill_time", "decode_time", "hybrid_time", "chunked_prefill_total",
-    "PipelineResult", "simulate_pipeline", "plan_to_spec",
+    "PipelineResult", "simulate_pipeline", "plan_to_spec", "plan_time",
 ]

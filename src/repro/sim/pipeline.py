@@ -26,15 +26,34 @@ from repro.sim.cost_model import BatchSpec, DecodeSeg, PrefillSeg, \
 from repro.sim.hardware import Hardware
 
 
+def _decode_seg(decodes) -> Tuple[DecodeSeg, ...]:
+    if not decodes:
+        return ()
+    avg_ctx = sum(d.ctx for d in decodes) / len(decodes)
+    return (DecodeSeg(len(decodes), max(int(avg_ctx), 1)),)
+
+
 def plan_to_spec(plan: IterationPlan, fused: bool = True) -> BatchSpec:
-    prefills = ()
-    if plan.chunk:
-        prefills = (PrefillSeg(len(plan.chunk.tokens), plan.chunk.start),)
-    decodes = ()
-    if plan.decodes:
-        avg_ctx = sum(d.ctx for d in plan.decodes) / len(plan.decodes)
-        decodes = (DecodeSeg(len(plan.decodes), max(int(avg_ctx), 1)),)
-    return BatchSpec(prefills=prefills, decodes=decodes, fused=fused)
+    prefills = tuple(PrefillSeg(len(c.tokens), c.start) for c in plan.chunks)
+    return BatchSpec(prefills=prefills, decodes=_decode_seg(plan.decodes),
+                     fused=fused)
+
+
+def plan_time(cfg: ModelConfig, hw: Hardware, plan: IterationPlan, *,
+              n_chips: int = 1, fused: bool = True) -> float:
+    """Cost a plan the way :meth:`Engine.execute` runs it: the first chunk
+    fused with all piggybacked decodes, remaining chunks as separate packed
+    sub-steps, each paying its own weight fetch.  Single-chunk plans reduce
+    to ``iteration_time(plan_to_spec(plan))``."""
+    decodes = _decode_seg(plan.decodes)
+    total = 0.0
+    for i, c in enumerate(plan.chunks or [None]):
+        spec = BatchSpec(
+            prefills=(PrefillSeg(len(c.tokens), c.start),) if c else (),
+            decodes=decodes if i == 0 else (), fused=fused)
+        if spec.n_tokens:
+            total += iteration_time(cfg, hw, spec, n_chips=n_chips).total
+    return total
 
 
 @dataclass
@@ -78,12 +97,10 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
         p2p_bytes_per_token = cfg.d_model * 2
 
     def stage_time(plan: IterationPlan) -> float:
-        bd = iteration_time(cfg, hw, plan_to_spec(plan, fused), n_chips=tp)
-        return bd.total / pp
+        return plan_time(cfg, hw, plan, n_chips=tp, fused=fused) / pp
 
     def p2p_time(plan: IterationPlan) -> float:
-        toks = (len(plan.chunk.tokens) if plan.chunk else 0) + \
-            len(plan.decodes)
+        toks = plan.n_prefill_tokens + len(plan.decodes)
         return toks * p2p_bytes_per_token / hw.link_bw
 
     # Requests involved in an in-flight micro-batch are locked until it
@@ -117,7 +134,7 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
         n_mb += 1
         dt = stage_time(plan)
         hop = p2p_time(plan)
-        ids = ([plan.chunk.req_id] if plan.chunk else []) + \
+        ids = [c.req_id for c in plan.chunks] + \
             [d.req_id for d in plan.decodes]
 
         t_prev_finish = None
@@ -137,10 +154,10 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
         for rid in ids:
             locked[rid] = t_prev_finish
         # feed dummy tokens (content-independent timing model)
+        last_chunk_ids = {c.req_id for c in plan.chunks if c.is_last}
+        decode_ids = {d.req_id for d in plan.decodes}
         tokens = {rid: 1 for rid in ids
-                  if (plan.chunk and rid == plan.chunk.req_id
-                      and plan.chunk.is_last)
-                  or rid in [d.req_id for d in plan.decodes]}
+                  if rid in last_chunk_ids or rid in decode_ids}
         scheduler.on_tokens(tokens)
         for r in list(scheduler.running):
             if r.done:

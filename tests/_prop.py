@@ -1,0 +1,146 @@
+"""Property-testing compat layer: real hypothesis when installed, else a
+small deterministic bounded-example fallback.
+
+Usage (drop-in for the subset of the hypothesis API this suite uses):
+
+    from _prop import given, settings, strategies as st
+
+The fallback's ``given`` runs each test with N generated examples (default
+30, overridable via ``@settings(max_examples=...)`` stacked ON TOP of
+``@given`` exactly like hypothesis).  Generation is deterministic — seeded
+by the test's qualified name — and the first two examples are the joint
+lower/upper boundary of every strategy, so the classic off-by-one edges
+(empty-ish lists, size-1 ranges, maxima) are always exercised.  There is
+no shrinking; on failure the falsifying example is attached to the raised
+error instead.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies    # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # fallback shim
+    import functools
+    import inspect
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+    DEFAULT_MAX_EXAMPLES = 30
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+        def bounds(self):
+            """(lowest, highest) representative examples."""
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            if min_value > max_value:
+                raise ValueError("min_value > max_value")
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+        def bounds(self):
+            return self.lo, self.hi
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def example(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+        def bounds(self):
+            return self.lo, self.hi
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+        def bounds(self):
+            return False, True
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+            if not self.elements:
+                raise ValueError("sampled_from of empty collection")
+
+        def example(self, rng):
+            return rng.choice(self.elements)
+
+        def bounds(self):
+            return self.elements[0], self.elements[-1]
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=None):
+            self.elements = elements
+            self.min_size = int(min_size)
+            self.max_size = int(max_size) if max_size is not None \
+                else self.min_size + 10
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elements.example(rng) for _ in range(n)]
+
+        def bounds(self):
+            lo, hi = self.elements.bounds()
+            return ([lo] * self.min_size, [hi] * self.max_size)
+
+    strategies = types.SimpleNamespace(
+        integers=_Integers, floats=_Floats,
+        booleans=_Booleans, sampled_from=_SampledFrom, lists=_Lists)
+
+    def given(*args, **strats):
+        if args:
+            raise TypeError("fallback given() supports keyword strategies "
+                            "only (pass name=strategy)")
+        for name, s in strats.items():
+            if not isinstance(s, _Strategy):
+                raise TypeError(f"{name}: not a strategy: {s!r}")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*wargs, **wkw):
+                n = wrapper._max_examples or DEFAULT_MAX_EXAMPLES
+                rng = random.Random(fn.__qualname__)
+                for i in range(n):
+                    if i == 0:
+                        kw = {k: s.bounds()[0] for k, s in strats.items()}
+                    elif i == 1:
+                        kw = {k: s.bounds()[1] for k, s in strats.items()}
+                    else:
+                        kw = {k: s.example(rng) for k, s in strats.items()}
+                    try:
+                        fn(*wargs, **kw, **wkw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({fn.__name__}, "
+                            f"example {i}/{n}): {kw!r}") from e
+
+            wrapper._max_examples = None
+            wrapper._is_prop_test = True
+            # hide the generated parameters from pytest's fixture
+            # resolution (leave any real fixture params visible)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strats])
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def settings(deadline=None, max_examples=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None and hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,0 +1,167 @@
+"""Token-budget (sarathi_serve) scheduler invariants — property tests via
+the _prop shim (real hypothesis when installed, bounded fallback otherwise),
+driven with a fake token feeder; no model execution."""
+from _prop import given, settings, strategies as st
+
+from repro.scheduler import POLICIES, Request, SarathiServeScheduler
+from repro.scheduler.request import State
+
+
+def drive(sched, reqs, record, now=None):
+    for r in reqs:
+        sched.submit(r)
+    guard = 0
+    while sched.has_work:
+        n_decoding = sum(1 for r in sched.running
+                         if r.state == State.DECODING)
+        kw = {"now": now} if now is not None else {}
+        plan = sched.next_plan(**kw)
+        if plan is None:
+            break
+        record(plan, n_decoding)
+        tokens = {}
+        for c in plan.chunks:
+            if c.is_last:
+                tokens[c.req_id] = 1
+        for d in plan.decodes:
+            tokens[d.req_id] = 1
+        sched.on_tokens(tokens)
+        guard += 1
+        assert guard < 100_000, "scheduler failed to make progress"
+
+
+def make_sched(chunk, slots, budget, **kw):
+    return SarathiServeScheduler(n_slots=slots,
+                                 max_decodes=max(slots - 1, 1),
+                                 chunk_size=chunk, token_budget=budget, **kw)
+
+
+def test_registered_in_policies():
+    assert POLICIES["sarathi_serve"] is SarathiServeScheduler
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    prompts=st.lists(st.integers(1, 90), min_size=1, max_size=12),
+    decode_len=st.integers(1, 9),
+    chunk=st.integers(1, 33),
+    slots=st.integers(1, 6),
+    budget=st.integers(1, 64),
+)
+def test_budget_invariants(prompts, decode_len, chunk, slots, budget):
+    reqs = [Request(prompt=[1] * p, max_new_tokens=decode_len)
+            for p in prompts]
+    sched = make_sched(chunk, slots, budget)
+    max_dec = max(slots - 1, 1)
+    prefill_seen = {r.req_id: [] for r in reqs}
+
+    def rec(plan, n_decoding):
+        # 1) the budget is a hard per-iteration cap
+        assert plan.n_prefill_tokens + plan.n_decode_tokens <= budget
+        # 2) decodes first, never evicted for prefill: every iteration
+        #    schedules as many decodes as are runnable under the caps,
+        #    regardless of how much prefill work is waiting
+        assert plan.n_decode_tokens == min(n_decoding, max_dec, budget)
+        # 3) every chunk respects the chunk size and slot bookkeeping
+        for c in plan.chunks:
+            assert 1 <= len(c.tokens) <= chunk
+            prefill_seen[c.req_id].append((c.start, len(c.tokens)))
+        ids = [c.req_id for c in plan.chunks]
+        assert len(ids) == len(set(ids))       # one chunk per request
+        dec_ids = [d.req_id for d in plan.decodes]
+        assert len(dec_ids) == len(set(dec_ids))
+        assert not set(ids) & set(dec_ids)     # no self-piggyback
+
+    drive(sched, reqs, rec)
+    # 4) no starvation: every request fully prefilled (chunks partition the
+    #    prompt exactly) and fully decoded
+    for r in reqs:
+        segs = prefill_seen[r.req_id]
+        total = 0
+        for (s, n) in segs:
+            assert s == total
+            total += n
+        assert total == r.prompt_len
+        assert len(r.output) == decode_len
+        assert r.done
+
+
+@settings(deadline=None, max_examples=25)
+@given(prompts=st.lists(st.integers(1, 50), min_size=2, max_size=10),
+       chunk=st.integers(1, 16), budget=st.integers(4, 48))
+def test_multi_chunk_fills_budget(prompts, chunk, budget):
+    """With no decodes yet and several waiting prompts, the first iteration
+    packs chunks from multiple requests until the budget (or the admitted
+    work) runs out."""
+    reqs = [Request(prompt=[1] * p, max_new_tokens=1) for p in prompts]
+    sched = make_sched(chunk, len(prompts) + 1, budget)
+    for r in reqs:
+        sched.submit(r)
+    plan = sched.next_plan()
+    assert plan is not None and not plan.decodes
+    # greedy FCFS packing, one chunk (<= chunk_size) per request, until the
+    # budget truncates
+    assert plan.n_prefill_tokens == \
+        min(budget, sum(min(chunk, p) for p in prompts))
+    assert len(plan.chunks) >= 2 or budget <= min(chunk, prompts[0])
+
+
+def test_arrival_time_gating_fcfs():
+    a = Request(prompt=[1] * 4, max_new_tokens=2, arrival_time=0.0)
+    b = Request(prompt=[1] * 4, max_new_tokens=2, arrival_time=5.0)
+    sched = make_sched(chunk=4, slots=4, budget=8)
+    sched.submit(a)
+    sched.submit(b)
+    plan = sched.next_plan(now=0.0)
+    assert [c.req_id for c in plan.chunks] == [a.req_id]   # b not arrived
+    plan = sched.next_plan(now=10.0)
+    assert b.req_id in [c.req_id for c in plan.chunks]
+
+
+def test_slot_pressure_backoff():
+    """While the decode slots are saturated, new requests are NOT admitted;
+    they are once a decode finishes."""
+    a = Request(prompt=[1], max_new_tokens=2)
+    b = Request(prompt=[1], max_new_tokens=6)
+    new = Request(prompt=[1] * 8, max_new_tokens=1)
+    sched = make_sched(chunk=8, slots=3, budget=16)     # max_decodes = 2
+    sched.submit(a)
+    sched.submit(b)
+    sched.next_plan()                   # prefill both 1-token prompts
+    sched.on_tokens({a.req_id: 1, b.req_id: 1})
+    assert a.state == State.DECODING and b.state == State.DECODING
+    sched.submit(new)
+    plan = sched.next_plan()
+    assert new.req_id not in [c.req_id for c in plan.chunks]  # backed off
+    assert len(plan.decodes) == 2       # both decodes still served
+    sched.on_tokens({a.req_id: 1, b.req_id: 1})
+    assert a.done                       # a hit max_new_tokens=2
+    plan = sched.next_plan()            # pressure released
+    assert new.req_id in [c.req_id for c in plan.chunks]
+    assert [d.req_id for d in plan.decodes] == [b.req_id]
+
+
+def test_replay_matches_offline_sarathi_plans():
+    """budget = C + D, one chunk per iteration, no backoff => plan-for-plan
+    identical to the offline SarathiScheduler (the deterministic-replay
+    guarantee the online loop builds on)."""
+    from repro.scheduler import SarathiScheduler
+
+    C, D, slots = 8, 3, 4
+    mk = lambda: [Request(prompt=[1] * p, max_new_tokens=d, req_id=i)
+                  for i, (p, d) in enumerate(
+                      [(13, 6), (9, 4), (21, 5), (5, 7), (17, 3)])]
+    ref_plans, got_plans = [], []
+    ref = SarathiScheduler(n_slots=slots, max_decodes=D, chunk_size=C)
+    drive(ref, mk(), lambda p, n: ref_plans.append(p))
+    got = make_sched(C, slots, C + D, max_chunks_per_iter=1,
+                     admit_backoff=False)
+    drive(got, mk(), lambda p, n: got_plans.append(p))
+    assert len(ref_plans) == len(got_plans)
+    for a, b in zip(ref_plans, got_plans):
+        assert [(c.req_id, c.start, list(c.tokens), c.is_last)
+                for c in a.chunks] == \
+            [(c.req_id, c.start, list(c.tokens), c.is_last)
+             for c in b.chunks]
+        assert [(d.req_id, d.ctx) for d in a.decodes] == \
+            [(d.req_id, d.ctx) for d in b.decodes]

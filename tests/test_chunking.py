@@ -1,7 +1,7 @@
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from _prop import given, strategies as st
 
 from repro.core import (MXU_TILE, kv_reload_bytes_factor, num_chunks,
                         optimal_pd_ratio, piggyback_coverage, plan_chunks,

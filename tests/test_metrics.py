@@ -1,0 +1,116 @@
+"""Serving-metrics unit tests: TTFT / TBT / queueing delay computed from
+hand-constructed traces must match closed-form expectations, including
+percentile edge cases (single sample, ties)."""
+import math
+
+import pytest
+
+from repro.serving.metrics import (RequestTrace, Stat, format_table,
+                                   percentile, summarize)
+
+
+# ------------------------------------------------------------- percentile
+def test_percentile_single_sample_is_itself():
+    for q in (0, 50, 90, 99, 100):
+        assert percentile([7.5], q) == 7.5
+
+
+def test_percentile_linear_interpolation():
+    v = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(v, 0) == 1.0
+    assert percentile(v, 100) == 4.0
+    assert percentile(v, 50) == pytest.approx(2.5)       # midpoint of ranks
+    assert percentile(v, 25) == pytest.approx(1.75)
+    # order must not matter
+    assert percentile([4.0, 1.0, 3.0, 2.0], 50) == pytest.approx(2.5)
+
+
+def test_percentile_ties_collapse():
+    assert percentile([2.0, 2.0, 2.0], 50) == 2.0
+    assert percentile([2.0, 2.0, 2.0], 99) == 2.0
+    assert percentile([1.0, 2.0, 2.0, 2.0, 9.0], 50) == 2.0
+
+
+def test_percentile_rejects_bad_input():
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+
+
+# ----------------------------------------------------------- trace-derived
+def make_trace():
+    # arrival 1.0, first work at 1.5, tokens at 2.0 / 2.5 / 3.5
+    t = RequestTrace(req_id=0, arrival=1.0)
+    t.mark_scheduled(1.5)
+    t.mark_scheduled(1.7)           # later marks must not move it
+    t.token_times.extend([2.0, 2.5, 3.5])
+    t.finish = 3.5
+    return t
+
+
+def test_trace_closed_form():
+    t = make_trace()
+    assert t.queue_delay == pytest.approx(0.5)           # 1.5 - 1.0
+    assert t.ttft == pytest.approx(1.0)                  # 2.0 - 1.0
+    assert t.tbts == pytest.approx([0.5, 1.0])           # gaps
+    assert t.e2e == pytest.approx(2.5)                   # 3.5 - 1.0
+    assert t.n_tokens == 3
+
+
+def test_trace_before_any_token():
+    t = RequestTrace(req_id=1, arrival=0.0)
+    assert t.ttft is None and t.queue_delay is None and t.e2e is None
+    assert t.tbts == []
+
+
+def test_summarize_single_request():
+    s = summarize([make_trace()])
+    assert s.n_requests == 1 and s.n_tokens == 3
+    # single-sample distributions: every percentile equals the value
+    assert s.ttft.p50 == s.ttft.p99 == s.ttft.mean == pytest.approx(1.0)
+    assert s.queue_delay.p99 == pytest.approx(0.5)
+    # two TBT samples: p50 is their midpoint, p99 interpolates to ~max
+    assert s.tbt.n == 2
+    assert s.tbt.p50 == pytest.approx(0.75)
+    assert s.tbt.p99 == pytest.approx(0.5 + 0.99 * 0.5)
+    assert s.tbt.max == pytest.approx(1.0)
+    # default makespan: first arrival .. last token
+    assert s.makespan == pytest.approx(2.5)
+    assert s.throughput == pytest.approx(3 / 2.5)
+
+
+def test_summarize_two_requests_and_explicit_makespan():
+    t1 = make_trace()
+    t2 = RequestTrace(req_id=2, arrival=0.0)
+    t2.mark_scheduled(0.0)
+    t2.token_times.extend([3.0, 6.0])
+    t2.finish = 6.0
+    s = summarize([t1, t2], makespan=10.0)
+    assert s.n_requests == 2 and s.n_tokens == 5
+    assert s.makespan == 10.0
+    assert s.throughput == pytest.approx(0.5)
+    # ttfts = [1.0, 3.0]; queue = [0.5, 0.0]; tbts = [0.5, 1.0, 3.0]
+    assert s.ttft.p50 == pytest.approx(2.0)
+    assert s.queue_delay.p50 == pytest.approx(0.25)
+    assert s.tbt.p50 == pytest.approx(1.0)
+    assert s.tbt.mean == pytest.approx(1.5)
+
+
+def test_summarize_empty_distributions_are_nan_not_crash():
+    t = RequestTrace(req_id=0, arrival=0.0)
+    s = summarize([t])
+    assert s.n_tokens == 0
+    assert s.ttft.n == 0 and math.isnan(s.ttft.p99)
+    assert "ttft" in format_table(s)
+
+
+def test_format_table_units():
+    out = format_table(summarize([make_trace()]), unit="ms")
+    assert "[ms]" in out
+    assert "1000.000" in out            # 1.0 s TTFT rendered in ms
+
+
+def test_stat_of_empty():
+    st = Stat.of([])
+    assert st.n == 0 and math.isnan(st.mean)

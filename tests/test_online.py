@@ -1,0 +1,160 @@
+"""Online continuous-serving loop: deterministic replay of the offline
+server on the real engine, arrival gating, and cost-model-clocked metrics."""
+import numpy as np
+import pytest
+
+from conftest import cached_model
+from repro.scheduler import POLICIES, Request
+from repro.serving import (CostModelExecutor, OnlineServer, Server,
+                           online_workload, poisson_arrivals, serve_online,
+                           trace_arrivals, uniform_arrivals)
+from repro.sim.hardware import A100
+
+
+def make_requests(cfg, lengths=(13, 9, 21, 5, 17), n_new=6, arrival=0.0):
+    r = np.random.default_rng(1)
+    return [Request(prompt=r.integers(0, cfg.vocab_size, int(n)).tolist(),
+                    max_new_tokens=n_new, arrival_time=arrival)
+            for n in lengths]
+
+
+def test_online_replays_offline_sarathi_token_for_token():
+    """Arrivals all at 0, budget = C + D, one chunk per iteration, no
+    backoff: the online loop must reproduce the offline Server /
+    SarathiScheduler outputs token-for-token, with identical per-iteration
+    batch composition."""
+    cfg, model, params = cached_model("tinyllama-1.1b")
+    C, slots = 8, 3
+    D = max(slots - 1, 1)
+
+    offline = Server(cfg, params, policy="sarathi", chunk_size=C,
+                     n_slots=slots, max_len=256, max_prompt_len=32)
+    off_reqs = make_requests(cfg)
+    off = offline.run(off_reqs)
+
+    online = OnlineServer(cfg, params, policy="sarathi_serve", chunk_size=C,
+                          n_slots=slots, max_len=256, max_prompt_len=32,
+                          token_budget=C + D,
+                          policy_kwargs=dict(max_chunks_per_iter=1,
+                                             admit_backoff=False))
+    on_reqs = make_requests(cfg)
+    on = online.run(on_reqs)
+
+    for a, b in zip(off_reqs, on_reqs):
+        assert on.outputs[b.req_id] == off.outputs[a.req_id]
+    assert [(i.n_prefill_tokens, i.n_decode_tokens) for i in on.iterations] \
+        == [(i.n_prefill_tokens, i.n_decode_tokens) for i in off.iterations]
+
+
+def test_warmup_preserves_stochastic_replay():
+    """Engine.warmup must not consume PRNG state: the warmed online loop
+    replays the cold offline server even under temperature sampling."""
+    from repro.core.sampling import SamplingParams
+
+    cfg, model, params = cached_model("tinyllama-1.1b")
+    sp = SamplingParams(temperature=1.0)
+    C, slots = 8, 3
+    D = max(slots - 1, 1)
+    off = Server(cfg, params, policy="sarathi", chunk_size=C, n_slots=slots,
+                 max_len=256, max_prompt_len=32, sampling=sp,
+                 seed=7).run(make_requests(cfg, lengths=(13, 9), n_new=4))
+    on = OnlineServer(cfg, params, policy="sarathi_serve", chunk_size=C,
+                      n_slots=slots, max_len=256, max_prompt_len=32,
+                      token_budget=C + D, sampling=sp, seed=7,
+                      policy_kwargs=dict(max_chunks_per_iter=1,
+                                         admit_backoff=False)
+                      ).run(make_requests(cfg, lengths=(13, 9), n_new=4))
+    assert sorted(on.outputs.values()) == sorted(off.outputs.values())
+
+
+def test_online_budget_scheduler_end_to_end_real_engine():
+    """Default sarathi_serve path (multi-chunk plans allowed, backoff on)
+    completes a real-engine run and produces exactly the greedy outputs."""
+    cfg, model, params = cached_model("tinyllama-1.1b")
+    srv = OnlineServer(cfg, params, chunk_size=8, n_slots=3, max_len=256,
+                       max_prompt_len=32, token_budget=20)
+    reqs = make_requests(cfg, lengths=(13, 9, 21), n_new=4)
+    ref = Server(cfg, params, policy="sarathi", chunk_size=8, n_slots=3,
+                 max_len=256, max_prompt_len=32)
+    want = ref.run(make_requests(cfg, lengths=(13, 9, 21), n_new=4))
+    res = srv.run(reqs)
+    got = sorted(res.outputs.values())
+    assert got == sorted(want.outputs.values())
+    s = res.summary()
+    assert s.n_requests == 3 and s.n_tokens == 12
+    assert s.ttft.n == 3 and s.tbt.n == 9      # 3 gaps per request
+    assert res.makespan > 0
+
+
+def test_arrival_gating_with_cost_model_clock():
+    """Requests arriving far apart are served alone: zero queueing delay,
+    clock jumps over idle gaps, makespan spans the last arrival."""
+    sched = POLICIES["sarathi_serve"](n_slots=4, max_decodes=3,
+                                      chunk_size=32, token_budget=35)
+    from repro.configs import get_config
+    cfg = get_config("tinyllama-1.1b")
+    reqs = [Request(prompt=[1] * 40, max_new_tokens=4, arrival_time=t)
+            for t in (0.0, 100.0, 200.0)]
+    res = serve_online(sched, CostModelExecutor(cfg, A100), reqs)
+    s = res.summary()
+    assert s.n_requests == 3 and s.n_tokens == 12
+    assert s.queue_delay.max == pytest.approx(0.0)       # no contention
+    assert res.makespan >= 200.0
+    for t in res.traces.values():
+        assert t.ttft is not None and t.ttft < 1.0       # served immediately
+        assert t.finish is not None
+
+
+def test_contention_builds_queueing_delay():
+    """All requests arriving at t=0 with one decode slot must queue."""
+    sched = POLICIES["sarathi_serve"](n_slots=2, max_decodes=1,
+                                      chunk_size=16, token_budget=17)
+    from repro.configs import get_config
+    cfg = get_config("tinyllama-1.1b")
+    reqs = [Request(prompt=[1] * 64, max_new_tokens=8, arrival_time=0.0)
+            for _ in range(6)]
+    res = serve_online(sched, CostModelExecutor(cfg, A100), reqs)
+    s = res.summary()
+    assert s.n_requests == 6
+    assert all(t.finish is not None for t in res.traces.values())
+    assert s.queue_delay.max > 0.0
+    # budget respected in every recorded iteration
+    assert all(i.n_prefill_tokens + i.n_decode_tokens <= 17
+               for i in res.iterations)
+
+
+def test_workload_generators():
+    p = poisson_arrivals(100, rate=4.0, seed=0)
+    assert len(p) == 100 and np.all(np.diff(p) >= 0) and p[0] > 0
+    # mean inter-arrival ~ 1/rate
+    assert np.mean(np.diff(p)) == pytest.approx(0.25, rel=0.5)
+    u = uniform_arrivals(5, rate=2.0)
+    assert u.tolist() == [0.0, 0.5, 1.0, 1.5, 2.0]
+    with pytest.raises(ValueError):
+        poisson_arrivals(5, rate=0.0)
+    with pytest.raises(ValueError):
+        trace_arrivals([1.0, 0.5])
+    reqs = online_workload(7, rate=2.0, min_len=4, max_len=16,
+                           vocab_size=100, seed=3)
+    assert len(reqs) == 7
+    assert all(4 <= len(r.prompt) + r.max_new_tokens <= 16 for r in reqs)
+    assert all(r.arrival_time >= 0 for r in reqs)
+    assert reqs == sorted(reqs, key=lambda r: r.arrival_time)
+    tr = online_workload(3, trace=[0.0, 1.0, 5.0], vocab_size=100,
+                         min_len=4, max_len=8)
+    assert [r.arrival_time for r in tr] == [0.0, 1.0, 5.0]
+
+
+def test_sim_pipeline_accepts_budget_policy():
+    """The budget policy drives the PP simulator through the shared
+    IterationPlan contract (multi-chunk plans included)."""
+    from repro.configs import get_config
+    from repro.sim import simulate_pipeline
+    sched = POLICIES["sarathi_serve"](n_slots=4, max_decodes=3,
+                                      chunk_size=8, token_budget=24)
+    for p, d in [(30, 4), (17, 3), (25, 2), (9, 5)]:
+        sched.submit(Request(prompt=[1] * p, max_new_tokens=d))
+    res = simulate_pipeline(get_config("tinyllama-1.1b"), A100, sched,
+                            pp=2)
+    assert res.makespan > 0 and res.n_microbatches > 0
+    assert len(res.request_finish) == 4

@@ -1,6 +1,6 @@
 """Scheduler-policy invariants (hypothesis property tests drive the policies
 with a fake token feeder — no model execution)."""
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.scheduler import (OrcaScheduler, Request, RequestLevelScheduler,
                              SarathiScheduler)
