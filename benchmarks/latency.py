@@ -17,11 +17,32 @@ so its P99 TBT grows with the prompt lengths in flight.
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
+import time
 from typing import List, Optional, Sequence, Tuple
 
 ROW_FIELDS = ("policy", "rate", "throughput", "p50_ttft", "p99_ttft",
               "p50_tbt", "p99_tbt", "p99_queue")
+
+
+def write_bench_json(path: str, *, name: str, params: dict,
+                     rows: Sequence[dict]) -> None:
+    """Machine-readable benchmark artifact (``BENCH_*.json``): one schema
+    shared by every benchmark so CI can archive a perf trajectory.
+
+    {"bench": name, "unix_time": ..., "params": {...}, "rows": [{...}]}
+    """
+    payload = {
+        "bench": name,
+        "unix_time": time.time(),
+        "params": {k: v for k, v in params.items()
+                   if isinstance(v, (int, float, str, bool, type(None)))},
+        "rows": list(rows),
+    }
+    pathlib.Path(path).write_text(json.dumps(payload, indent=1,
+                                             sort_keys=True) + "\n")
 
 
 def sweep_policy(cfg, hw, policy: str, rates: Sequence[float], *, n: int,
@@ -65,6 +86,8 @@ def main(argv=None) -> None:
     ap.add_argument("--min-len", type=int, default=128)
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_latency.json",
+                    help="machine-readable artifact path ('' disables)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config
@@ -89,6 +112,7 @@ def main(argv=None) -> None:
                       file=sys.stderr)
 
     print(",".join(ROW_FIELDS))
+    all_rows = []
     for policy in policies:
         for row in sweep_policy(cfg, hw, policy, rates, n=args.n,
                                 chunk=args.chunk, slots=args.slots,
@@ -97,6 +121,11 @@ def main(argv=None) -> None:
                                 seed=args.seed):
             name, rate, *vals = row
             print(f"{name},{rate:g}," + ",".join(f"{v:.6g}" for v in vals))
+            all_rows.append(dict(zip(ROW_FIELDS, row)))
+    if args.json:
+        write_bench_json(args.json, name="latency_sweep",
+                         params=vars(args), rows=all_rows)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,167 @@
+"""Memory-capacity sweep: paged KV block pool vs dense slot rows.
+
+Two views, both at an EQUAL HBM budget (device capacity minus weights):
+
+1. **Analytic capacity** — how many concurrent requests each layout can
+   hold as a function of actual context length: the dense cache reserves
+   ``max_len`` per slot, the paged pool only ``ceil(len / block_size)``
+   blocks, so the ratio approaches ``max_len / len``.
+2. **Simulated serving** — the online loop (cost-model clock) under an
+   offered load that overflows the dense slot count, with the block-aware
+   scheduler managing the same token budget as a pool: reports the peak
+   concurrent in-flight requests, pool utilization, preemptions and
+   recompute overhead per (block_size, n_blocks) point.
+
+    PYTHONPATH=src python -m benchmarks.memory \
+        [--arch tinyllama-1.1b] [--hw a100-80gb] [--max-len 4096] \
+        [--block-size 16,32,128] [--n-blocks 64,128] [--json BENCH_memory.json]
+
+Emits CSV on stdout and a machine-readable ``BENCH_memory.json`` artifact
+(see benchmarks/latency.py for the shared artifact shape).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+ROW_FIELDS = ("mode", "block_size", "n_blocks", "seq_len", "capacity",
+              "vs_dense", "peak_inflight", "peak_pool_util",
+              "preemptions", "recompute_per_token", "throughput")
+
+# the simulated workload's prompt + decode total is bounded by this (the
+# online_workload max_len), so it is exactly the per-slot row length an
+# equal-HBM dense cache must reserve
+SIM_SEQ_MAX = 512
+
+
+def analytic_rows(cfg, hw, *, max_len: int, block_sizes, seq_lens,
+                  n_chips: int) -> List[dict]:
+    """Concurrent-request capacity at the hardware's KV budget."""
+    from repro.sim.cost_model import (dense_capacity, kv_budget_bytes,
+                                      paged_capacity)
+    budget = kv_budget_bytes(cfg, hw, n_chips)
+    rows = []
+    for L in seq_lens:
+        dense = dense_capacity(cfg, budget, max_len)
+        rows.append(dict(mode="dense", block_size=0, n_blocks=0, seq_len=L,
+                         capacity=dense, vs_dense=1.0))
+        for bs in block_sizes:
+            cap = paged_capacity(cfg, budget, bs, L)
+            rows.append(dict(mode="paged", block_size=bs,
+                             n_blocks=int(budget // (
+                                 max(cfg.kv_bytes_per_token(), 1) * bs)),
+                             seq_len=L, capacity=cap,
+                             vs_dense=cap / dense if dense else float("inf")))
+    return rows
+
+
+def simulated_rows(cfg, hw, *, block_sizes, n_blocks_list, n: int,
+                   chunk: int, slots: int, rate: float, seed: int
+                   ) -> List[dict]:
+    """Drive the online loop (cost-model clock) with a block-pool-limited
+    scheduler and record effective concurrency / preemption behaviour."""
+    from repro.cache import BlockManager
+    from repro.scheduler import POLICIES
+    from repro.serving import CostModelExecutor, online_workload, \
+        serve_online
+
+    def peak_concurrent(res) -> int:
+        """Max requests simultaneously in service (overlapping
+        [first-scheduled, finish] spans)."""
+        events = []
+        for t in res.traces.values():
+            if t.scheduled is not None and t.finish is not None:
+                events.append((t.scheduled, 1))
+                events.append((t.finish, -1))
+        peak = cur = 0
+        for _, d in sorted(events):          # ties: -1 sorts before +1
+            cur += d
+            peak = max(peak, cur)
+        return peak
+
+    def run(bm: Optional[BlockManager], n_slots: int):
+        reqs = online_workload(n, rate=rate, pd_ratio=4.0, min_len=64,
+                               max_len=SIM_SEQ_MAX,
+                               vocab_size=cfg.vocab_size, seed=seed)
+        sched = POLICIES["sarathi_serve"](
+            n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
+            chunk_size=chunk, token_budget=chunk + n_slots,
+            block_manager=bm)
+        res = serve_online(sched, CostModelExecutor(cfg, hw), reqs)
+        return res, peak_concurrent(res)
+
+    rows = []
+    for bs in block_sizes:
+        for nb in n_blocks_list:
+            pool_tokens = (nb - 1) * bs
+            # dense baseline at the SAME HBM: every slot reserves the
+            # workload's worst-case row (SIM_SEQ_MAX tokens)
+            dense_slots = max(pool_tokens // SIM_SEQ_MAX, 1)
+            _, dense_peak = run(None, dense_slots)
+            bm = BlockManager(nb, bs, watermark=0.02)
+            res, peak = run(bm, slots)
+            s = res.summary()
+            rows.append(dict(
+                mode="sim", block_size=bs, n_blocks=nb,
+                seq_len=SIM_SEQ_MAX,
+                capacity=peak, vs_dense=peak / max(dense_peak, 1),
+                peak_inflight=peak, peak_pool_util=res.peak_pool_util,
+                preemptions=res.n_preemptions,
+                recompute_per_token=s.recompute_overhead,
+                throughput=s.throughput))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--hw", default="a100-80gb")
+    ap.add_argument("--max-len", type=int, default=4096)
+    ap.add_argument("--block-size", default="16,32,128",
+                    help="comma-separated block sizes to sweep")
+    ap.add_argument("--n-blocks", default="48,96",
+                    help="comma-separated pool sizes for the simulation")
+    ap.add_argument("--seq-lens", default="128,512,2048")
+    ap.add_argument("--n", type=int, default=48, help="simulated requests")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=16.0)
+    ap.add_argument("--n-chips", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_memory.json",
+                    help="machine-readable artifact path ('' disables)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.sim.hardware import PROFILES
+
+    cfg = get_config(args.arch)
+    if args.hw.lower() not in PROFILES:
+        ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
+    hw = PROFILES[args.hw.lower()]
+    block_sizes = [int(x) for x in args.block_size.split(",") if x]
+    n_blocks_list = [int(x) for x in args.n_blocks.split(",") if x]
+    seq_lens = [int(x) for x in args.seq_lens.split(",") if x]
+
+    rows = analytic_rows(cfg, hw, max_len=args.max_len,
+                         block_sizes=block_sizes, seq_lens=seq_lens,
+                         n_chips=args.n_chips)
+    rows += simulated_rows(cfg, hw, block_sizes=block_sizes,
+                           n_blocks_list=n_blocks_list, n=args.n,
+                           chunk=args.chunk, slots=args.slots,
+                           rate=args.rate, seed=args.seed)
+
+    print(",".join(ROW_FIELDS))
+    for r in rows:
+        print(",".join(str(r.get(f, "")) for f in ROW_FIELDS))
+
+    if args.json:
+        from benchmarks.latency import write_bench_json
+        write_bench_json(args.json, name="memory_sweep",
+                         params=vars(args), rows=rows)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

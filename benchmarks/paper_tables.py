@@ -4,7 +4,6 @@
 from __future__ import annotations
 
 import itertools
-import math
 from typing import List, Tuple
 
 import numpy as np
@@ -14,7 +13,7 @@ from benchmarks import schedules as sched
 from repro.configs.paper_models import gpt3_175b, llama_13b, llama_33b
 from repro.core import quantized_chunk_size
 from repro.scheduler import OrcaScheduler, Request, SarathiScheduler
-from repro.sim import (A100, A6000, TPU_V5E, BatchSpec, DecodeSeg,
+from repro.sim import (A100, A6000, BatchSpec, DecodeSeg,
                        PrefillSeg, chunked_prefill_total, decode_time,
                        iteration_time, prefill_time, simulate_pipeline)
 

@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.data import serving_workload

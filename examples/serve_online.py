@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--budget", type=int, default=None,
                     help="token budget (default chunk + decode slots)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV block pool (repro.cache)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="pool size (default: dense-equivalent capacity; "
+                         "shrink to exercise preemption)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -40,13 +46,19 @@ def main():
     srv = OnlineServer(cfg, params, policy=args.policy,
                        chunk_size=args.chunk, n_slots=args.slots,
                        token_budget=args.budget, max_len=512,
-                       max_prompt_len=64)
+                       max_prompt_len=64, paged=args.paged,
+                       block_size=args.block_size, n_blocks=args.n_blocks)
     res = srv.run(reqs)
 
     hybrid = sum(1 for it in res.iterations
                  if it.n_prefill_tokens and it.n_decode_tokens)
     print(f"policy={args.policy} rate={args.rate:g}/s "
-          f"iterations={len(res.iterations)} hybrid={hybrid}")
+          f"iterations={len(res.iterations)} hybrid={hybrid}"
+          + (f" paged(bs={args.block_size}, "
+             f"blocks={srv.engine.block_manager.n_blocks}, "
+             f"util mean={res.mean_pool_util:.0%} "
+             f"peak={res.peak_pool_util:.0%}, "
+             f"preemptions={res.n_preemptions})" if args.paged else ""))
     print(format_table(res.summary(), unit="ms"))
     for rid in sorted(res.traces):
         t = res.traces[rid]

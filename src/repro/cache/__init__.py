@@ -1,0 +1,56 @@
+"""Paged KV-cache memory subsystem (vLLM-style block space management).
+
+Why
+---
+The dense engine preallocates one ``max_len``-long cache row per slot, so
+HBM capacity is consumed by the *worst-case* sequence length of every
+admitted request.  Real workloads are short on average and long in the
+tail, so most of that reservation is internal fragmentation — which caps
+the decode batch size and therefore how many decodes can piggyback on a
+SARATHI chunk.  The paged layout (Sarathi-Serve / vLLM) instead carves the
+KV pool into fixed-size **blocks** and maps each request's logical token
+positions onto physical blocks through a per-request **block table**, so a
+request only ever holds ``ceil(context / block_size)`` blocks.
+
+Memory model
+------------
+* The pool is ``[n_blocks, block_size, n_kv_heads, head_dim]`` per layer;
+  every layer shares ONE block table per request (vLLM's layout), so the
+  :class:`BlockManager` does its bookkeeping once for the whole model.
+* Physical block **0 is reserved as the scratch block**: padded batch
+  entries (the no-chunk iteration, unused decode lanes) point their whole
+  block table at it, so their writes land somewhere harmless — this
+  subsumes the dense engine's extra ``n_slots + 1`` scratch *row* (a full
+  ``max_len`` of HBM) with a single block.
+* Allocation is a free-list pop; nothing is zeroed on free.  Freed blocks
+  self-heal exactly like dense rows: garbage KV is either overwritten
+  before it becomes visible or hidden by the causal / context-length mask.
+
+Tuning
+------
+* ``block_size`` trades internal fragmentation (up to ``block_size - 1``
+  wasted token slots per request) against table length and per-block
+  bookkeeping; 16–32 suits CPU/interpret runs, 128 aligns the Pallas
+  kernels' KV tiles with the MXU lane width on real TPUs.
+* ``n_blocks`` sets the HBM budget: ``n_blocks * block_size`` pooled token
+  slots replace the dense ``(n_slots + 1) * max_len`` reservation.  At
+  equal HBM the pool admits ~``max_len / avg_len`` times more concurrent
+  requests.
+* ``watermark`` (fraction of usable blocks) gates *admission* only: a new
+  request is admitted when its whole prompt fits with the watermark to
+  spare, which keeps headroom for the running requests' decode appends and
+  makes immediate re-preemption unlikely.
+
+Preemption semantics
+--------------------
+When a decode append finds the pool dry, the scheduler preempts the
+lowest-priority (latest-admitted) running request: its blocks are freed,
+its request state is reset for **recompute** (prompt + generated tokens
+re-enter as one prefill), and it rejoins the head of the waiting queue.
+Under greedy sampling recompute is exact — the regenerated KV is
+bit-identical, so preemption is invisible in the output stream and shows
+up only as latency (tracked per request as ``recompute_tokens``).
+"""
+from repro.cache.block_manager import BlockManager, PoolExhausted
+
+__all__ = ["BlockManager", "PoolExhausted"]

@@ -1,0 +1,125 @@
+"""Free-list block allocator with per-request block tables.
+
+Pure-python bookkeeping (no jax): the manager decides *which* physical
+blocks back *which* logical positions; the engine turns the resulting
+tables into the int32 arrays the packed step consumes.  One manager is
+shared by the engine and the (block-aware) scheduler so admission checks,
+decode reservations and the engine's lazy per-chunk allocation all see the
+same free list.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class BlockManager:
+    """Fixed-size-block KV pool: free-list allocation, watermark-gated
+    admission, per-request block tables, free-on-finish.
+
+    Block 0 is reserved as the scratch block (see ``repro.cache``); the
+    usable pool is blocks ``1 .. n_blocks - 1``.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, *,
+                 watermark: float = 0.0):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (one is reserved scratch)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if not 0.0 <= watermark < 1.0:
+            raise ValueError("watermark must be in [0, 1)")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self.scratch_block = 0
+        self.n_usable = self.n_blocks - 1
+        self.watermark_blocks = math.ceil(watermark * self.n_usable)
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_usable - self.n_free
+
+    @property
+    def utilization(self) -> float:
+        return self.n_used / self.n_usable if self.n_usable else 0.0
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return max(0, -(-int(n_tokens) // self.block_size))
+
+    def table(self, req_id: int) -> List[int]:
+        return list(self._tables.get(req_id, ()))
+
+    def allocated_tokens(self, req_id: int) -> int:
+        """Token capacity of the blocks currently held by ``req_id``."""
+        return len(self._tables.get(req_id, ())) * self.block_size
+
+    def padded_table(self, req_id: Optional[int], n_entries: int
+                     ) -> np.ndarray:
+        """The request's block table as int32 [n_entries], padded with the
+        scratch block (``req_id=None`` -> an all-scratch table)."""
+        out = np.full((n_entries,), self.scratch_block, np.int32)
+        if req_id is not None:
+            t = self._tables.get(req_id, ())
+            out[:len(t)] = t
+        return out
+
+    # ----------------------------------------------------------- capacity
+    def can_allocate(self, n_tokens: int, *, watermark: bool = True) -> bool:
+        """Would a fresh ``n_tokens`` allocation fit?  With ``watermark``
+        (admission semantics) the post-allocation free count must stay
+        above the watermark; without (append semantics) any fit counts."""
+        need = self.blocks_for_tokens(n_tokens)
+        floor = self.watermark_blocks if watermark else 0
+        return self.n_free - need >= floor
+
+    def can_append(self, req_id: int, n_tokens: int) -> bool:
+        """Can ``req_id``'s table grow to cover ``n_tokens`` positions?
+        Appends for already-running requests ignore the watermark."""
+        need = self.blocks_for_tokens(n_tokens) \
+            - len(self._tables.get(req_id, ()))
+        return need <= self.n_free
+
+    def appendable_tokens(self, req_id: int) -> int:
+        """Positions ``req_id`` could cover right now: already-allocated
+        capacity plus everything left in the free list (no watermark)."""
+        return self.allocated_tokens(req_id) + self.n_free * self.block_size
+
+    # --------------------------------------------------------- allocation
+    def ensure(self, req_id: int, n_tokens: int) -> List[int]:
+        """Grow ``req_id``'s block table to cover ``n_tokens`` logical
+        positions; returns the (possibly unchanged) table.  Idempotent —
+        the scheduler's reservation and the engine's lazy per-chunk call
+        may both run for the same iteration."""
+        table = self._tables.setdefault(req_id, [])
+        need = self.blocks_for_tokens(n_tokens) - len(table)
+        if need > self.n_free:
+            raise PoolExhausted(
+                f"req {req_id}: need {need} blocks, {self.n_free} free "
+                f"(n_blocks={self.n_blocks}, block_size={self.block_size})")
+        for _ in range(max(need, 0)):
+            table.append(self._free.pop())
+        return table
+
+    def free(self, req_id: int) -> int:
+        """Return all of ``req_id``'s blocks to the free list (idempotent:
+        the scheduler frees on finish/preempt and the engine frees on slot
+        release — whichever runs second is a no-op).  Returns the number
+        of blocks released."""
+        table = self._tables.pop(req_id, None)
+        if not table:
+            return 0
+        self._free.extend(reversed(table))
+        return len(table)

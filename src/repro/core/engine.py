@@ -15,10 +15,19 @@ a decode-maximal hybrid — is the same compiled computation:
 This is how the paper's uniform-compute property is realised operationally:
 every iteration is the *same shape* of work, so pipeline micro-batches are
 balanced by construction.
+
+With ``paged=True`` the full-attention KV moves from dense per-slot rows to
+a block pool (``repro.cache``): the engine allocates blocks lazily per
+chunk / decode step from a :class:`~repro.cache.BlockManager` (shareable
+with a block-aware scheduler), threads per-request block tables through the
+:class:`~repro.models.packed.PackedBatch`, and frees blocks on release —
+including preemptive release for recompute when the pool runs dry.  Slots
+remain for the O(1)-per-request state (ring windows, SSM/LRU, cross KV);
+the old ``n_slots + 1`` scratch *row* survives only for those leaves, while
+the paged KV's padding writes land in the reserved scratch *block*.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -26,28 +35,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import BlockManager
 from repro.configs.base import ModelConfig
 from repro.core.sampling import SamplingParams, sample
 from repro.models import PackedBatch, build_model
 from repro.models.registry import Model
 
+# paged block-pool leaves (repro.models.blocks.init_paged_attn_cache) are
+# block-indexed, not slot-indexed: nothing to wipe on slot reuse — freed
+# blocks self-heal exactly like dense KV rows (overwritten before visible,
+# or hidden by the context mask)
+_POOL_KEYS = frozenset({"pk", "pv"})
+
 
 def _reset_slot(cache, slot):
-    """Zero every cache leaf's row ``slot`` (-1 for integer leaves, which are
-    ring-buffer position markers where -1 == empty)."""
-    def wipe(leaf):
+    """Zero every slot-indexed cache leaf's row ``slot`` (-1 for integer
+    leaves, which are ring-buffer position markers where -1 == empty).
+
+    The tree structure is derived from the cache dict itself rather than
+    hard-coded: any leaf under a ``groups`` key carries a leading group
+    axis before the slot axis (the scanned-layer stacking of
+    ``repro.models.stack.init_cache``), block-pool leaves are skipped, and
+    every other leaf is slot-major — so new cache shapes are wiped (or
+    deliberately skipped) without this function having to know about them.
+    """
+    def wipe(path, leaf):
+        keys = [p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        if keys and keys[-1] in _POOL_KEYS:
+            return leaf
+        lead = 1 if "groups" in keys else 0
         fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
-        row = jnp.full(leaf.shape[1:], fill, leaf.dtype)
-        return leaf.at[slot].set(row)
-    # group caches have a leading group axis before the slot axis
-    def wipe_grouped(leaf):
-        fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
-        row = jnp.full(leaf.shape[0:1] + leaf.shape[2:], fill, leaf.dtype)
-        return leaf.at[:, slot].set(row)
-    return {
-        "groups": jax.tree.map(wipe_grouped, cache["groups"]),
-        "tail": jax.tree.map(wipe, cache["tail"]),
-    }
+        row = jnp.full(leaf.shape[:lead] + leaf.shape[lead + 1:], fill,
+                       leaf.dtype)
+        idx = (slice(None),) * lead + (slot,)
+        return leaf.at[idx].set(row)
+
+    return jax.tree_util.tree_map_with_path(wipe, cache)
 
 
 @dataclass
@@ -114,7 +138,10 @@ class Engine:
                  max_len: int, chunk_size: int, decode_slots: int,
                  dtype=jnp.float32,
                  sampling: SamplingParams = SamplingParams(),
-                 seed: int = 0):
+                 seed: int = 0, paged: bool = False,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 watermark: float = 0.0,
+                 block_manager: Optional[BlockManager] = None):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -123,7 +150,29 @@ class Engine:
         self.n_slots = int(n_slots)
         self.max_len = int(max_len)
         self.scratch = n_slots                    # extra scratch row
-        self.cache = self.model.init_cache(n_slots + 1, max_len, dtype)
+        self.block_manager: Optional[BlockManager] = None
+        if paged or block_manager is not None:
+            bm = block_manager
+            if bm is None:
+                if max_len % block_size:
+                    raise ValueError(f"max_len={max_len} must be a "
+                                     f"multiple of block_size={block_size}")
+                if n_blocks is None:
+                    # same token capacity as the dense rows it replaces,
+                    # minus the max_len-long scratch row (now ONE block)
+                    n_blocks = n_slots * (max_len // block_size) + 1
+                bm = BlockManager(n_blocks, block_size,
+                                  watermark=watermark)
+            if max_len % bm.block_size:
+                raise ValueError("max_len must tile by the block size")
+            self.block_manager = bm
+            self.blocks_per_seq = max_len // bm.block_size
+            self.cache = self.model.init_cache(
+                n_slots + 1, max_len, dtype, paged_blocks=bm.n_blocks,
+                block_size=bm.block_size)
+        else:
+            self.blocks_per_seq = 0
+            self.cache = self.model.init_cache(n_slots + 1, max_len, dtype)
         self.sampling = sampling
         self._key = jax.random.PRNGKey(seed)
         self._free: List[int] = list(range(n_slots))
@@ -133,6 +182,10 @@ class Engine:
         self._seed_cross = jax.jit(self.model.seed_cross_kv)
         self._reset_slot = jax.jit(_reset_slot)
         self.iterations = 0
+
+    @property
+    def paged(self) -> bool:
+        return self.block_manager is not None
 
     # ----------------------------------------------------------- requests
     def add_request(self, req_id: int, memory=None) -> int:
@@ -158,6 +211,8 @@ class Engine:
     def release(self, req_id: int):
         slot = self._slot_of.pop(req_id)
         self._free.append(slot)
+        if self.block_manager is not None:
+            self.block_manager.free(req_id)   # idempotent vs scheduler free
 
     def slot(self, req_id: int) -> int:
         return self._slot_of[req_id]
@@ -224,11 +279,29 @@ class Engine:
             ds[i] = self._slot_of[w.req_id]
             dc[i] = w.ctx
 
+        # block tables: allocate whatever this iteration's writes need
+        # (idempotent when a block-aware scheduler already reserved);
+        # padded entries point at the scratch block, so the scratch chunk
+        # and unused decode lanes write into ONE reserved block instead of
+        # a whole max_len scratch row
+        M = self.blocks_per_seq
+        cb = np.zeros((M,), np.int32)
+        db = np.zeros((self.D, M), np.int32)
+        if self.paged:
+            bm = self.block_manager
+            if chunk:
+                bm.ensure(chunk.req_id, chunk.start + len(chunk.tokens))
+                cb = bm.padded_table(chunk.req_id, M)
+            for i, w in enumerate(decodes):
+                bm.ensure(w.req_id, w.ctx + 1)
+                db[i] = bm.padded_table(w.req_id, M)
+
         pk = PackedBatch(
             chunk_tokens=jnp.asarray(ct), chunk_slot=jnp.int32(c_slot),
             chunk_start=jnp.int32(c_start), chunk_len=jnp.int32(c_len),
             decode_tokens=jnp.asarray(dt), decode_slots=jnp.asarray(ds),
-            decode_ctx=jnp.asarray(dc))
+            decode_ctx=jnp.asarray(dc), chunk_blocks=jnp.asarray(cb),
+            decode_blocks=jnp.asarray(db))
 
         self._key, sub = jax.random.split(self._key)
         chunk_tok, dec_tok, self.cache = self._step(

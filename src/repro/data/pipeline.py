@@ -7,7 +7,6 @@ distribution (Zipf sequence lengths in [min,max], fixed P:D ratio).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Iterator, List, Optional, Sequence, Tuple
 

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -1e30
+from repro.kernels.ops import (flash_finish, flash_init, flash_scores,
+                               flash_update)
 
 
 def _kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
@@ -36,40 +37,21 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        flash_init(m_ref, l_ref, acc_ref)
 
     i = pl.program_id(1)
     start = start_ref[0]
     q = q_ref[0]                                    # [bq, hd]
     k = k_ref[0]                                    # [bk, hd]
     v = v_ref[0]
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # [bq, bk]
-
+    s = flash_scores(q, k, scale)                   # [bq, bk]
     qpos = start + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = kpos <= qpos
-    s = jnp.where(mask, s, NEG)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    flash_update(m_ref, l_ref, acc_ref, s, kpos <= qpos, v)
 
     @pl.when(j == n_kv_blocks - 1)
     def _finish():
-        l = l_ref[...]
-        o = jnp.where(l[:, None] > 0,
-                      acc_ref[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
-        o_ref[0] = o.astype(o_ref.dtype)
+        o_ref[0] = flash_finish(m_ref, l_ref, acc_ref, o_ref.dtype)
 
 
 def chunked_prefill_attention(q, k, v, start, *, bq: int = 128,

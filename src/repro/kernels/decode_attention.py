@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -1e30
+from repro.kernels.ops import (flash_finish, flash_init, flash_scores,
+                               flash_update)
 
 
 def _kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
@@ -29,38 +30,20 @@ def _kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        flash_init(m_ref, l_ref, acc_ref)
 
     b = pl.program_id(0)
     ctx = ctx_ref[b]
     q = q_ref[0, 0]                                 # [g, hd]
     k = k_ref[0, :, 0, :]                           # [bk, hd]
     v = v_ref[0, :, 0, :]
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # [g, bk]
+    s = flash_scores(q, k, scale)                   # [g, bk]
     kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = kpos <= ctx
-    s = jnp.where(mask, s, NEG)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    flash_update(m_ref, l_ref, acc_ref, s, kpos <= ctx, v)
 
     @pl.when(j == n_kv_blocks - 1)
     def _finish():
-        l = l_ref[...]
-        o = jnp.where(l[:, None] > 0,
-                      acc_ref[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
-        o_ref[0, 0] = o.astype(o_ref.dtype)
+        o_ref[0, 0] = flash_finish(m_ref, l_ref, acc_ref, o_ref.dtype)
 
 
 def decode_attention(q, k, v, ctx, *, bk: int = 128,

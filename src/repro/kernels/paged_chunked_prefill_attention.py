@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: chunked-prefill attention over a PAGED KV pool.
+
+The SARATHI offset-causal chunk kernel (see
+:mod:`repro.kernels.chunked_prefill_attention`) with the KV cache pooled
+into ``[n_blocks, block_size, nk, hd]`` and the chunk's request addressed
+through its block table: the j-th KV tile of the sweep is physical block
+``block_table[j]``, scalar-prefetched into SMEM so the index map can steer
+the HBM->VMEM DMA.  The KV tile size is therefore the pool's block size.
+
+Grid = (heads, C/bq, n_table_entries) with the KV/table axis innermost
+("arbitrary" sequential semantics), flash accumulators in VMEM scratch.
+Table entries past the request's allocation point at the scratch block;
+their logical positions exceed ``start + C - 1`` so the causal mask hides
+them.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import (flash_finish, flash_init, flash_scores,
+                               flash_update)
+
+
+def _kernel(start_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bq: int, bs: int, n_table_entries: int,
+            scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        flash_init(m_ref, l_ref, acc_ref)
+
+    i = pl.program_id(1)
+    start = start_ref[0]
+    q = q_ref[0]                                    # [bq, hd]
+    k = k_ref[0, :, 0, :]                           # [bs, hd]
+    v = v_ref[0, :, 0, :]
+    s = flash_scores(q, k, scale)                   # [bq, bs]
+    qpos = start + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 0)
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+    flash_update(m_ref, l_ref, acc_ref, s, kpos <= qpos, v)
+
+    @pl.when(j == n_table_entries - 1)
+    def _finish():
+        o_ref[0] = flash_finish(m_ref, l_ref, acc_ref, o_ref.dtype)
+
+
+def paged_chunked_prefill_attention(q, pool_k, pool_v, block_table, start,
+                                    *, bq: int = 128,
+                                    interpret: bool = True):
+    """q [C, nq, hd] — the prefill chunk's queries (positions start+i);
+    pool_k/pool_v [n_blocks, block_size, nk, hd] — the paged pool (the
+    chunk's own KV already written through the table); block_table [M]
+    int32 physical block ids (scratch-padded); start — scalar int32.
+    Returns [C, nq, hd].  C must tile by bq."""
+    C, nq, hd = q.shape
+    bs, nk = pool_k.shape[1], pool_k.shape[2]
+    M = block_table.shape[0]
+    bq = min(bq, C)
+    if C % bq:
+        raise ValueError(f"C={C} must tile by bq={bq}")
+    g = nq // nk
+    qh = jnp.moveaxis(q, 1, 0)                      # [nq, C, hd]
+    grid = (nq, C // bq, M)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # start, block_table
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd),
+                         lambda h, i, j, s_ref, bt_ref: (h, i, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda h, i, j, s_ref, bt_ref:
+                         (bt_ref[j], 0, h // g, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda h, i, j, s_ref, bt_ref:
+                         (bt_ref[j], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd),
+                               lambda h, i, j, s_ref, bt_ref: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bs=bs, n_table_entries=M,
+                          scale=1.0 / math.sqrt(hd)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nq, C, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(start, jnp.int32).reshape(1),
+      jnp.asarray(block_table, jnp.int32), qh, pool_k, pool_v)
+    return jnp.moveaxis(out, 0, 1)

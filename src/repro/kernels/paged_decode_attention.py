@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: batched decode attention over a PAGED KV pool.
+
+Same computation as :mod:`repro.kernels.decode_attention` — one new query
+token per sequence attends its cached context — but the KV cache is a
+pooled ``[n_blocks, block_size, nk, hd]`` tensor and each sequence's
+context lives in the physical blocks named by its block table.  The block
+tables and per-sequence context lengths ride in SMEM via scalar prefetch;
+the KV BlockSpec's index map reads ``bt_ref[b, j]`` so the DMA engine
+gathers the j-th *logical* block of sequence ``b`` from wherever it
+physically lives, tile by tile — no dense row is ever materialised.
+
+Grid = (B, nk, n_table_entries), KV innermost, so the fp32 flash
+accumulators persist in VMEM scratch across a sequence's block sweep.
+Table entries past the sequence's allocation point at the scratch block
+(physical block 0); their keys sit at logical positions beyond ``ctx`` and
+are masked like any stale dense tail.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import (flash_finish, flash_init, flash_scores,
+                               flash_update)
+
+
+def _kernel(ctx_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs: int, n_table_entries: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        flash_init(m_ref, l_ref, acc_ref)
+
+    b = pl.program_id(0)
+    ctx = ctx_ref[b]
+    q = q_ref[0, 0]                                 # [g, hd]
+    k = k_ref[0, :, 0, :]                           # [bs, hd]
+    v = v_ref[0, :, 0, :]
+    s = flash_scores(q, k, scale)                   # [g, bs]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    flash_update(m_ref, l_ref, acc_ref, s, kpos <= ctx, v)
+
+    @pl.when(j == n_table_entries - 1)
+    def _finish():
+        o_ref[0, 0] = flash_finish(m_ref, l_ref, acc_ref, o_ref.dtype)
+
+
+def paged_decode_attention(q, pool_k, pool_v, block_tables, ctx, *,
+                           interpret: bool = True):
+    """q [B, nq, hd] (ONE new token per sequence); pool_k/pool_v
+    [n_blocks, block_size, nk, hd] (new KV already written at logical
+    position ctx); block_tables [B, M] int32 physical block ids (scratch-
+    padded); ctx [B] int32.  Returns [B, nq, hd]."""
+    B, nq, hd = q.shape
+    bs, nk = pool_k.shape[1], pool_k.shape[2]
+    M = block_tables.shape[1]
+    g = nq // nk
+    qh = q.reshape(B, nk, g, hd)
+    grid = (B, nk, M)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # ctx, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b, h, j, c_ref, bt_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, c_ref, bt_ref:
+                         (bt_ref[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, c_ref, bt_ref:
+                         (bt_ref[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, j, c_ref, bt_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, n_table_entries=M,
+                          scale=1.0 / math.sqrt(hd)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nk, g, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(ctx, jnp.int32), jnp.asarray(block_tables, jnp.int32),
+      qh, pool_k, pool_v)
+    return out.reshape(B, nq, hd)

@@ -21,3 +21,26 @@ def decode_attention_ref(q, k, v, ctx):
     keys at positions <= ctx are visible)."""
     mask = cm.causal_cache_mask(ctx[:, None].astype(jnp.int32), k.shape[1])
     return cm.gqa_attention(q[:, None], k, v, mask)[:, 0]
+
+
+def gather_paged_rows(pool, block_tables):
+    """Reconstruct dense cache rows from a paged pool: pool [N, bs, nk, hd],
+    block_tables [..., M] -> [..., M * bs, nk, hd] (logical position order).
+    This is the oracle's view of block-table indirection — the paged
+    kernels must behave as if attending these gathered rows."""
+    return cm.gather_block_rows(pool, block_tables)
+
+
+def paged_chunked_prefill_attention_ref(q, pool_k, pool_v, block_table,
+                                        start):
+    """q [C, nq, hd]; pools [N, bs, nk, hd]; block_table [M]; start scalar."""
+    return chunked_prefill_attention_ref(
+        q, gather_paged_rows(pool_k, block_table),
+        gather_paged_rows(pool_v, block_table), start)
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, block_tables, ctx):
+    """q [B, nq, hd]; pools [N, bs, nk, hd]; block_tables [B, M]; ctx [B]."""
+    return decode_attention_ref(
+        q, gather_paged_rows(pool_k, block_tables),
+        gather_paged_rows(pool_v, block_tables), ctx)

@@ -9,7 +9,6 @@ hybrid) for the 16x16 or 2x16x16 mesh without allocation.
         --dry-run --shape decode_32k [--multi-pod]
 """
 import argparse
-import sys
 
 
 def main(argv=None):
@@ -33,7 +32,6 @@ def main(argv=None):
         return
 
     import jax
-    import numpy as np
     from repro.configs import get_config
     from repro.data import serving_workload
     from repro.models import build_model

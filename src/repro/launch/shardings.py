@@ -16,7 +16,6 @@ Sharding policy (see DESIGN.md §5):
 """
 from __future__ import annotations
 
-import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -24,8 +23,6 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import stack
-from repro.optim import adamw_init
 
 MDL = "model"
 DATA = "data"

@@ -73,6 +73,16 @@ def init_attn_cache(cfg: ModelConfig, rows: int, max_len: int, dtype) -> Dict:
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
 
 
+def init_paged_attn_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                          dtype) -> Dict:
+    """Pooled KV for full-attention layers: ``[n_blocks, block_size, nk,
+    hd]`` addressed through per-request block tables (``repro.cache``).
+    Keys ``pk``/``pv`` (vs dense ``k``/``v``) mark the layout, so the
+    packed path and the engine's slot reset dispatch structurally."""
+    shp = (n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"pk": jnp.zeros(shp, dtype), "pv": jnp.zeros(shp, dtype)}
+
+
 def init_swa_cache(cfg: ModelConfig, rows: int, window: int, dtype) -> Dict:
     shp = (rows, window, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
@@ -149,6 +159,67 @@ def cross_batched(cfg, p, x, cache, *, memory=None):
 
 
 # ------------------------------------------------------------ packed: attn
+import os
+
+
+def _paged_attn_backend() -> str:
+    """Attention backend for the paged packed path: "xla" (portable gather
+    + blocked flash attention, the default) or "pallas" (the block-table
+    scalar-prefetch kernels of repro.kernels — native on TPU, interpret
+    mode elsewhere)."""
+    return os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla")
+
+
+def _attn_packed_paged(cfg, p, q, k, v, pos, cache, pk: PackedBatch):
+    """Block-table variant of the full-attention packed path: KV written
+    through (physical block, offset) scatter, read either via a dense-row
+    gather (XLA backend) or the paged Pallas kernels."""
+    C, D = pk.num_chunk, pk.num_decode
+    pool_k, pool_v = cache["pk"], cache["pv"]
+    bs = pool_k.shape[1]
+    M = pk.chunk_blocks.shape[0]
+    use_pallas = _paged_attn_backend() == "pallas"
+    if use_pallas:
+        from repro.kernels import ops as kops
+    outs = []
+    if C:
+        cpos = pos[:C]
+        # padding lanes past max_len must NOT clamp into the table's last
+        # (live) block — route them to the reserved scratch block instead
+        bidx = cpos // bs
+        phys = jnp.where(bidx < M,
+                         pk.chunk_blocks[jnp.clip(bidx, 0, M - 1)], 0)
+        pool_k = pool_k.at[phys, cpos % bs].set(k[:C])
+        pool_v = pool_v.at[phys, cpos % bs].set(v[:C])
+        if use_pallas:
+            bq = 128 if C % 128 == 0 else C
+            out_c = kops.paged_chunked_prefill_attention(
+                q[:C], pool_k, pool_v, pk.chunk_blocks, pk.chunk_start,
+                bq=bq)
+        else:
+            row_k = cm.gather_block_rows(pool_k, pk.chunk_blocks)[None]
+            row_v = cm.gather_block_rows(pool_v, pk.chunk_blocks)[None]
+            out_c = cm.blocked_gqa_attention(q[None, :C], row_k, row_v,
+                                             cpos[None])[0]
+        outs.append(out_c)
+    if D:
+        bidx = (pk.decode_ctx // bs)[:, None]
+        phys = jnp.take_along_axis(pk.decode_blocks, bidx, axis=1)[:, 0]
+        pool_k = pool_k.at[phys, pk.decode_ctx % bs].set(k[C:])
+        pool_v = pool_v.at[phys, pk.decode_ctx % bs].set(v[C:])
+        if use_pallas:
+            out_d = kops.paged_decode_attention(
+                q[C:], pool_k, pool_v, pk.decode_blocks, pk.decode_ctx)
+        else:
+            gk = cm.gather_block_rows(pool_k, pk.decode_blocks)
+            gv = cm.gather_block_rows(pool_v, pk.decode_blocks)
+            out_d = cm.blocked_gqa_attention(
+                q[C:, None], gk, gv, pk.decode_ctx[:, None])[:, 0]
+        outs.append(out_d)
+    out = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
+    return out, {"pk": pool_k, "pv": pool_v}
+
+
 def attn_packed(cfg, p, x, cache, pk: PackedBatch,
                 window: Optional[int] = None):
     """x [T, d] packed hybrid batch."""
@@ -158,6 +229,11 @@ def attn_packed(cfg, p, x, cache, pk: PackedBatch,
     sin, cos = cm.rope_sin_cos(pos, cfg.head_dim, cfg.rope_theta)
     q = cm.apply_rope(q, sin, cos)
     k = cm.apply_rope(k, sin, cos)
+
+    if "pk" in cache:
+        assert window is None, "window caches are slot-indexed, not paged"
+        out, new_cache = _attn_packed_paged(cfg, p, q, k, v, pos, cache, pk)
+        return out.reshape(C + D, cfg.q_dim) @ p["wo"], new_cache
 
     outs = []
     if window is None:

@@ -212,12 +212,39 @@ def write_kv_rows(cache, new, start):
 
 
 def write_kv_slot(cache, new, slot, start):
-    """Write one sequence's L new tokens into cache row ``slot`` at ``start``.
+    """Write one sequence's C new tokens into cache row ``slot`` at ``start``.
 
-    cache [R, S, nk, hd], new [L, nk, hd]; slot/start scalars (traced ok).
+    cache [R, S, nk, hd], new [C, nk, hd]; slot/start scalars (traced ok).
+    Rows landing past the cache length are DROPPED: a padded chunk whose
+    static width spills past max_len (e.g. an unaligned final chunk from a
+    budget scheduler) must not clamp into live positions the way a naive
+    dynamic_update_slice would (it clamps ``start`` and rewrites context).
+    Implemented with contiguous slice ops (not a per-token scatter, which
+    XLA can't vectorise): clamp the window to fit, rotate ``new`` so valid
+    tokens stay at their absolute positions, and blend the wrapped lanes
+    with the window's previous contents.
     """
+    S = cache.shape[1]
+    C = new.shape[0]
+    start_c = jnp.clip(start, 0, max(S - C, 0))
+    d = start - start_c                  # spill: 0 unless the pad overruns
+    rolled = jnp.roll(new, d, axis=0)
+    old = jax.lax.dynamic_slice(
+        cache, (slot, start_c, 0, 0), (1, C) + cache.shape[2:])[0]
+    keep_old = jnp.arange(C, dtype=jnp.int32)[:, None, None] < d
     return jax.lax.dynamic_update_slice(
-        cache, new[None], (slot, start, 0, 0))
+        cache, jnp.where(keep_old, old, rolled)[None],
+        (slot, start_c, 0, 0))
+
+
+def gather_block_rows(pool, block_tables):
+    """Paged pool -> dense rows: pool [N, bs, nk, hd] x tables [..., M]
+    -> [..., M * bs, nk, hd] in logical-position order (shared by the
+    packed paged attention path and the kernel oracles)."""
+    bt = jnp.asarray(block_tables, jnp.int32)
+    rows = pool[bt]
+    shp = bt.shape[:-1] + (bt.shape[-1] * pool.shape[1],) + pool.shape[2:]
+    return rows.reshape(shp)
 
 
 def write_kv_scatter(cache, new, slots, positions):

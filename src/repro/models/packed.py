@@ -41,6 +41,15 @@ class PackedBatch:
     decode_tokens [D] int32 — last sampled token of each piggybacked request
     decode_slots  [D] int32 — cache rows
     decode_ctx    [D] int32 — context length (== position of the new token)
+
+    With a PAGED KV cache (see ``repro.cache``) the full-attention KV of a
+    request lives in pool blocks named by its block table; the slot fields
+    above still index the per-request recurrent/window/cross state rows:
+
+    chunk_blocks  [M] int32 — physical block id of each of the chunk
+                     request's logical blocks (M = max_len // block_size),
+                     padded with the scratch block.  M == 0 <=> dense mode.
+    decode_blocks [D, M] int32 — ditto per piggybacked decode.
     """
     chunk_tokens: jax.Array
     chunk_slot: jax.Array
@@ -49,6 +58,8 @@ class PackedBatch:
     decode_tokens: jax.Array
     decode_slots: jax.Array
     decode_ctx: jax.Array
+    chunk_blocks: jax.Array
+    decode_blocks: jax.Array
 
     @property
     def num_chunk(self) -> int:
@@ -75,7 +86,8 @@ class PackedBatch:
 
 def make_packed(chunk_tokens=None, chunk_slot=0, chunk_start=0,
                 chunk_len=None, decode_tokens=None, decode_slots=None,
-                decode_ctx=None) -> PackedBatch:
+                decode_ctx=None, chunk_blocks=None,
+                decode_blocks=None) -> PackedBatch:
     """Convenience constructor with numpy/python inputs."""
     ct = jnp.asarray(chunk_tokens if chunk_tokens is not None else [],
                      dtype=jnp.int32)
@@ -87,6 +99,10 @@ def make_packed(chunk_tokens=None, chunk_slot=0, chunk_start=0,
     dc = jnp.asarray(decode_ctx if decode_ctx is not None
                      else jnp.zeros((D,)), dtype=jnp.int32)
     cl = chunk_len if chunk_len is not None else ct.shape[0]
+    cb = jnp.asarray(chunk_blocks if chunk_blocks is not None else [],
+                     dtype=jnp.int32)
+    db = jnp.asarray(decode_blocks if decode_blocks is not None
+                     else jnp.zeros((D, cb.shape[0])), dtype=jnp.int32)
     return PackedBatch(
         chunk_tokens=ct,
         chunk_slot=jnp.asarray(chunk_slot, dtype=jnp.int32),
@@ -95,4 +111,6 @@ def make_packed(chunk_tokens=None, chunk_slot=0, chunk_start=0,
         decode_tokens=dt,
         decode_slots=ds,
         decode_ctx=dc,
+        chunk_blocks=cb,
+        decode_blocks=db,
     )

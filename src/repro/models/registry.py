@@ -19,8 +19,11 @@ class Model:
     def init_params(self, key, dtype=jnp.float32):
         return stack.init_params(self.cfg, key, dtype)
 
-    def init_cache(self, rows: int, max_len: int, dtype=jnp.float32):
-        return stack.init_cache(self.cfg, rows, max_len, dtype)
+    def init_cache(self, rows: int, max_len: int, dtype=jnp.float32, *,
+                   paged_blocks=None, block_size=None):
+        return stack.init_cache(self.cfg, rows, max_len, dtype,
+                                paged_blocks=paged_blocks,
+                                block_size=block_size)
 
     def forward_batched(self, params, tokens, cache=None, start=None, *,
                         memory=None, train=False, logits_mode="all",

@@ -14,7 +14,6 @@ in depth; a non-divisible remainder becomes explicit tail layers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -115,9 +114,18 @@ def init_layer(cfg: ModelConfig, kind: str, key, dtype) -> Dict:
 
 
 def init_layer_cache(cfg: ModelConfig, kind: str, rows: int, max_len: int,
-                     dtype) -> Dict:
+                     dtype, paged: Optional[Tuple[int, int]] = None) -> Dict:
+    """``paged`` = (n_blocks, block_size) pools the full-attention KV of
+    this layer (block-table indirection, see ``repro.cache``); window /
+    cross / recurrent state stays slot-indexed — it is O(1) or O(window)
+    per request, so paging buys nothing there."""
+    def full_attn():
+        if paged is not None:
+            return bk.init_paged_attn_cache(cfg, paged[0], paged[1], dtype)
+        return bk.init_attn_cache(cfg, rows, max_len, dtype)
+
     if kind in ("dense", "moe"):
-        return {"attn": bk.init_attn_cache(cfg, rows, max_len, dtype)}
+        return {"attn": full_attn()}
     if kind == "swa":
         w = min(cfg.sliding_window, max_len)
         return {"attn": bk.init_swa_cache(cfg, rows, w, dtype)}
@@ -131,7 +139,7 @@ def init_layer_cache(cfg: ModelConfig, kind: str, rows: int, max_len: int,
     if kind == "ssd":
         return {"ssd": bk.init_ssd_cache(cfg, rows, dtype)}
     if kind == "xdec":
-        return {"attn": bk.init_attn_cache(cfg, rows, max_len, dtype),
+        return {"attn": full_attn(),
                 "cross": bk.init_cross_cache(cfg, rows, dtype)}
     if kind == "enc":
         return {}
@@ -281,17 +289,26 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
 
 
 def init_cache(cfg: ModelConfig, rows: int, max_len: int,
-               dtype=jnp.float32) -> Dict:
+               dtype=jnp.float32, *, paged_blocks: Optional[int] = None,
+               block_size: Optional[int] = None) -> Dict:
+    """``paged_blocks``/``block_size`` switch full-attention KV to the
+    pooled paged layout (every layer gets its own ``paged_blocks``-block
+    pool; one block table per request addresses all layers)."""
     group_kinds, n_groups, tail_kinds = group_split(cfg)
+    paged = None
+    if paged_blocks is not None:
+        if not block_size:
+            raise ValueError("paged cache needs block_size")
+        paged = (int(paged_blocks), int(block_size))
 
     def one_group():
-        return [init_layer_cache(cfg, kind, rows, max_len, dtype)
+        return [init_layer_cache(cfg, kind, rows, max_len, dtype, paged)
                 for kind in group_kinds]
 
     groups = [one_group() for _ in range(n_groups)]
     return {
         "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
-        "tail": [init_layer_cache(cfg, kind, rows, max_len, dtype)
+        "tail": [init_layer_cache(cfg, kind, rows, max_len, dtype, paged)
                  for kind in tail_kinds],
     }
 

@@ -22,6 +22,18 @@ the control knob — compose each iteration under a fixed TOKEN BUDGET:
 Because the budget bounds per-iteration work and decodes ride along every
 iteration, inter-token latency is flat ("stall-free") regardless of how
 long the co-running prompts are.
+
+With a shared :class:`repro.cache.BlockManager` the policy is additionally
+**block-aware** (the vLLM/Sarathi-Serve memory discipline):
+
+* admission is gated on ``can_allocate`` — the whole prompt must fit in
+  the pool with the watermark to spare;
+* every scheduled decode *reserves* its next block before the plan is
+  emitted, so the engine's KV append can never fail mid-iteration;
+* when the pool runs dry, the lowest-priority (latest-admitted) running
+  request is preempted for recompute: blocks freed, request re-queued at
+  the head of the waiting line (``Request.preempt``);
+* prefill chunks shrink to the tokens the free list can actually back.
 """
 from __future__ import annotations
 
@@ -29,7 +41,7 @@ from typing import Optional
 
 from repro.core.engine import DecodeWork, IterationPlan
 from repro.scheduler.policies import POLICIES, Scheduler
-from repro.scheduler.request import State
+from repro.scheduler.request import Request, State
 
 
 class SarathiServeScheduler(Scheduler):
@@ -52,13 +64,14 @@ class SarathiServeScheduler(Scheduler):
     """
 
     supports_time = True            # next_plan() accepts now= for gating
+    supports_preempt = True         # next_plan() accepts preempt_hook=
 
     def __init__(self, *, n_slots: int, max_decodes: int, chunk_size: int,
                  token_budget: Optional[int] = None,
                  max_chunks_per_iter: Optional[int] = None,
-                 admit_backoff: bool = True):
+                 admit_backoff: bool = True, block_manager=None):
         super().__init__(n_slots=n_slots, max_decodes=max_decodes,
-                         chunk_size=chunk_size)
+                         chunk_size=chunk_size, block_manager=block_manager)
         self.token_budget = int(token_budget if token_budget is not None
                                 else chunk_size + max_decodes)
         if self.token_budget < 1:
@@ -72,33 +85,110 @@ class SarathiServeScheduler(Scheduler):
             n_dec = sum(1 for r in self.running if r.state == State.DECODING)
             if n_dec >= self.max_decodes:
                 return
+        bm = self.block_manager
         while self.waiting and len(self.running) < self.n_slots:
             req = self.waiting[0]
             # FCFS: a not-yet-arrived head blocks later arrivals too
             if now is not None and req.arrival_time > now:
                 break
+            if bm is not None:
+                # watermark-gated admission: the whole prefill must fit
+                # with headroom left for running requests' decode appends.
+                # Preempted requests readmit with append semantics (no
+                # watermark) — they were already admitted once and may
+                # legally have grown past the admissible threshold.
+                fresh = req.n_preemptions == 0
+                floor = bm.watermark_blocks if fresh else 0
+                if bm.blocks_for_tokens(len(req.prefill_tokens)) \
+                        > bm.n_usable - floor:
+                    # can NEVER be admitted at this pool geometry (vLLM's
+                    # AllocStatus.NEVER): reject instead of wedging the
+                    # FCFS queue behind an impossible head
+                    self.waiting.popleft()
+                    req.state = State.FINISHED
+                    self.rejected.append(req)
+                    continue
+                if not bm.can_allocate(len(req.prefill_tokens),
+                                       watermark=fresh):
+                    break
             self.waiting.popleft()
             req.state = State.PREFILLING
             self.running.append(req)
             if admit_hook:
                 admit_hook(req)
 
+    # --------------------------------------------------------- preemption
+    def _preempt(self, victim: Request, preempt_hook=None):
+        """Evict ``victim`` for recompute: free its pool blocks, hand it to
+        the executor hook (slot release), and re-queue it at the head of
+        the waiting line (it keeps its FCFS arrival priority)."""
+        self.running.remove(victim)
+        if self.block_manager is not None:
+            self.block_manager.free(victim.req_id)
+        if preempt_hook:
+            preempt_hook(victim)
+        victim.preempt()
+        self.waiting.appendleft(victim)
+        self.n_preemptions += 1
+
+    def _pick_victim(self, protect) -> Optional[Request]:
+        """Lowest-priority running request: latest admitted, skipping the
+        ``protect`` set (requests already scheduled this iteration)."""
+        for r in reversed(self.running):
+            if r.req_id not in protect:
+                return r
+        return None
+
     # ------------------------------------------------------------- policy
-    def next_plan(self, admit_hook=None,
-                  now: Optional[float] = None) -> Optional[IterationPlan]:
+    def next_plan(self, admit_hook=None, now: Optional[float] = None,
+                  preempt_hook=None) -> Optional[IterationPlan]:
         self._admit(admit_hook, now)
         if not self.running:
             return None
         self.iteration += 1
         plan = IterationPlan()
         budget = self.token_budget
-        # 1) decodes first — never displaced by prefill
-        decoding = [r for r in self.running if r.state == State.DECODING]
-        for r in decoding[: min(self.max_decodes, budget)]:
+        bm = self.block_manager
+        # 1) decodes first — never displaced by prefill.  With a block
+        # manager each decode RESERVES the block its new token lands in;
+        # a dry pool preempts the lowest-priority running request.
+        decode_cap = min(self.max_decodes, budget)
+        scheduled = set()
+        for r in list(self.running):
+            if r.state != State.DECODING:
+                continue
+            if len(plan.decodes) >= decode_cap:
+                break
+            if r not in self.running:       # preempted earlier this pass
+                continue
+            if bm is not None:
+                need = r.decode_position + 1
+                preempted_self = False
+                while not bm.can_append(r.req_id, need):
+                    victim = self._pick_victim(scheduled | {r.req_id})
+                    if victim is None:
+                        # everyone else is already in this plan: evict r
+                        # itself (its decode waits for the recompute)
+                        if len(self.running) == 1 and bm.blocks_for_tokens(
+                                r.context_len + 1) > bm.n_usable:
+                            raise RuntimeError(
+                                f"KV pool too small for req {r.req_id} "
+                                f"alone (ctx={r.context_len}); grow "
+                                f"n_blocks")
+                        self._preempt(r, preempt_hook)
+                        preempted_self = True
+                        break
+                    self._preempt(victim, preempt_hook)
+                if preempted_self:
+                    continue
+                bm.ensure(r.req_id, need)
             plan.decodes.append(DecodeWork(r.req_id, r.last_token,
                                            r.decode_position))
+            scheduled.add(r.req_id)
             budget -= 1
-        # 2) fill the remainder with FCFS prefill chunks
+        # 2) fill the remainder with FCFS prefill chunks, shrunk to what
+        # the free list can back (prefills never trigger preemption — the
+        # next iteration's decodes have first claim on reclaimed blocks)
         prefilling = [r for r in self.running if r.state == State.PREFILLING
                       and r.prefill_remaining > 0]
         for r in prefilling:
@@ -108,6 +198,11 @@ class SarathiServeScheduler(Scheduler):
                     and len(plan.chunks) >= self.max_chunks_per_iter):
                 break
             n = min(self.chunk_size, budget, r.prefill_remaining)
+            if bm is not None:
+                n = min(n, bm.appendable_tokens(r.req_id) - r.prefilled)
+                if n <= 0:
+                    break
+                bm.ensure(r.req_id, r.prefilled + n)
             plan.chunks.append(self._take_chunk(r, n))
             budget -= n
         if not plan.chunks and not plan.decodes:

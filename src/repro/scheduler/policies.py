@@ -24,15 +24,25 @@ from repro.scheduler.request import Request, State
 
 
 class Scheduler:
-    """Base: FCFS admission into a fixed number of engine slots."""
+    """Base: FCFS admission into a fixed number of engine slots.
 
-    def __init__(self, *, n_slots: int, max_decodes: int, chunk_size: int):
+    ``block_manager`` (optional, shared with a paged engine) makes the
+    scheduler release a finished request's KV blocks on retirement; the
+    block-AWARE composition logic (admission gating, decode reservation,
+    preemption under memory pressure) lives in the policies that opt in
+    (``repro.scheduler.budget.SarathiServeScheduler``)."""
+
+    def __init__(self, *, n_slots: int, max_decodes: int, chunk_size: int,
+                 block_manager=None):
         self.n_slots = n_slots
         self.max_decodes = max_decodes
         self.chunk_size = chunk_size
+        self.block_manager = block_manager
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
+        self.rejected: List[Request] = []   # unservable at pool geometry
         self.iteration = 0
+        self.n_preemptions = 0
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request):
@@ -58,6 +68,8 @@ class Scheduler:
         finished = [r for r in self.running if r.done]
         for r in finished:
             self.running.remove(r)
+            if self.block_manager is not None:
+                self.block_manager.free(r.req_id)
             if release_hook:
                 release_hook(r)
 
@@ -68,8 +80,9 @@ class Scheduler:
     def _take_chunk(self, req: Request, n: int) -> ChunkWork:
         """Cut the next ``n``-token prefill chunk off ``req`` and advance
         its lifecycle (prefilled counter, PREFILLING -> DECODING on the
-        last chunk)."""
-        toks = list(req.prompt[req.prefilled: req.prefilled + n])
+        last chunk).  ``prefill_tokens`` is the prompt, plus — after a
+        preemption — the generated tokens being recomputed."""
+        toks = list(req.prefill_tokens[req.prefilled: req.prefilled + n])
         chunk = ChunkWork(req.req_id, toks, req.prefilled,
                           is_last=(n == req.prefill_remaining))
         req.prefilled += n

@@ -27,12 +27,22 @@ class Request:
     eos_token: Optional[int] = None
 
     state: State = State.QUEUED
-    prefilled: int = 0                       # prompt tokens already processed
+    prefilled: int = 0                       # prefill tokens already processed
     output: List[int] = field(default_factory=list)
+
+    # preemption-by-recompute (paged KV pool pressure, see repro.cache):
+    # after a preemption the request re-prefills prompt + generated-so-far.
+    prefill_tokens: List[int] = field(default=None)  # tokens to prefill
+    n_preemptions: int = 0
+    recompute_tokens: int = 0                # context re-prefilled overall
 
     # bookkeeping for metrics
     first_token_iter: Optional[int] = None
     finish_iter: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_tokens is None:
+            self.prefill_tokens = list(self.prompt)
 
     @property
     def prompt_len(self) -> int:
@@ -41,11 +51,23 @@ class Request:
     @property
     def context_len(self) -> int:
         """Tokens currently in the cache for this request."""
-        return self.prefilled + len(self.output)
+        outputs_in_prefill = len(self.prefill_tokens) - self.prompt_len
+        return self.prefilled + len(self.output) - outputs_in_prefill
 
     @property
     def prefill_remaining(self) -> int:
-        return self.prompt_len - self.prefilled
+        return len(self.prefill_tokens) - self.prefilled
+
+    def preempt(self):
+        """Evict this request for later RECOMPUTE: its cache blocks are
+        gone, so everything known (prompt + generated tokens) re-enters as
+        one prefill.  Under greedy sampling the regenerated KV is exact,
+        so preemption only costs latency (tracked in recompute_tokens)."""
+        self.recompute_tokens += self.context_len
+        self.n_preemptions += 1
+        self.prefill_tokens = list(self.prompt) + list(self.output)
+        self.prefilled = 0
+        self.state = State.QUEUED
 
     @property
     def decode_position(self) -> int:

@@ -44,6 +44,8 @@ class RequestTrace:
     scheduled: Optional[float] = None       # first time any work ran
     finish: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
+    n_preemptions: int = 0                  # paged-pool evictions suffered
+    recompute_tokens: int = 0               # context re-prefilled after them
 
     def mark_scheduled(self, t: float):
         if self.scheduled is None:
@@ -100,15 +102,25 @@ class ServingSummary:
     tbt: Stat
     queue_delay: Stat
     e2e: Stat
+    # paged KV pool pressure (all zero for dense-cache runs)
+    n_preemptions: int = 0
+    recompute_tokens: int = 0
+    peak_pool_util: float = 0.0
 
     @property
     def throughput(self) -> float:
         """Generated tokens per second of serving time."""
         return self.n_tokens / self.makespan if self.makespan > 0 else 0.0
 
+    @property
+    def recompute_overhead(self) -> float:
+        """Re-prefilled tokens per generated token (preemption cost)."""
+        return self.recompute_tokens / self.n_tokens if self.n_tokens else 0.0
+
 
 def summarize(traces: Iterable[RequestTrace],
-              makespan: Optional[float] = None) -> ServingSummary:
+              makespan: Optional[float] = None,
+              peak_pool_util: float = 0.0) -> ServingSummary:
     traces = list(traces)
     ttfts = [t.ttft for t in traces if t.ttft is not None]
     tbts = [g for t in traces for g in t.tbts]
@@ -122,7 +134,10 @@ def summarize(traces: Iterable[RequestTrace],
     return ServingSummary(
         n_requests=len(traces), n_tokens=n_tokens, makespan=makespan,
         ttft=Stat.of(ttfts), tbt=Stat.of(tbts),
-        queue_delay=Stat.of(queues), e2e=Stat.of(e2es))
+        queue_delay=Stat.of(queues), e2e=Stat.of(e2es),
+        n_preemptions=sum(t.n_preemptions for t in traces),
+        recompute_tokens=sum(t.recompute_tokens for t in traces),
+        peak_pool_util=peak_pool_util)
 
 
 def format_table(s: ServingSummary, unit: str = "s") -> str:
@@ -131,7 +146,13 @@ def format_table(s: ServingSummary, unit: str = "s") -> str:
     rows = [("ttft", s.ttft), ("tbt", s.tbt),
             ("queue_delay", s.queue_delay), ("e2e", s.e2e)]
     out = [f"requests={s.n_requests} tokens={s.n_tokens} "
-           f"makespan={s.makespan:.3f}s throughput={s.throughput:.1f} tok/s",
+           f"makespan={s.makespan:.3f}s throughput={s.throughput:.1f} tok/s",]
+    if s.n_preemptions or s.peak_pool_util:
+        out.append(f"preemptions={s.n_preemptions} "
+                   f"recompute_tokens={s.recompute_tokens} "
+                   f"(overhead {s.recompute_overhead:.2f} tok/tok) "
+                   f"peak_pool_util={s.peak_pool_util:.0%}")
+    out += [
            f"{'metric':<12s} {'n':>5s} {'mean':>9s} {'p50':>9s} "
            f"{'p90':>9s} {'p99':>9s} {'max':>9s}   [{unit}]"]
     for name, st in rows:

@@ -49,6 +49,11 @@ class EngineExecutor:
     def release(self, req: Request):
         self.engine.release(req.req_id)
 
+    def preempt(self, req: Request):
+        """Free the preempted request's slot (and pool blocks, when paged);
+        it will re-enter via ``admit`` once readmitted for recompute."""
+        self.engine.release(req.req_id)
+
     def warmup(self):
         """Compile the packed step off the clock; PRNG/iteration state is
         preserved so warmed and cold engines replay identically."""
@@ -84,6 +89,9 @@ class CostModelExecutor:
     def release(self, req: Request):
         pass
 
+    def preempt(self, req: Request):
+        pass
+
     def warmup(self):
         pass
 
@@ -105,6 +113,8 @@ class IterationRecord:
     duration: float
     n_prefill_tokens: int
     n_decode_tokens: int
+    pool_blocks_used: int = 0          # paged KV pool occupancy (0 = dense)
+    pool_blocks_total: int = 0
 
 
 @dataclass
@@ -113,9 +123,23 @@ class OnlineResult:
     outputs: Dict[int, List[int]]
     iterations: List[IterationRecord] = field(default_factory=list)
     makespan: float = 0.0
+    n_preemptions: int = 0
+
+    @property
+    def peak_pool_util(self) -> float:
+        return max((i.pool_blocks_used / i.pool_blocks_total
+                    for i in self.iterations if i.pool_blocks_total),
+                   default=0.0)
+
+    @property
+    def mean_pool_util(self) -> float:
+        utils = [i.pool_blocks_used / i.pool_blocks_total
+                 for i in self.iterations if i.pool_blocks_total]
+        return sum(utils) / len(utils) if utils else 0.0
 
     def summary(self) -> ServingSummary:
-        return summarize(self.traces.values(), makespan=self.makespan)
+        return summarize(self.traces.values(), makespan=self.makespan,
+                         peak_pool_util=self.peak_pool_util)
 
 
 def serve_online(scheduler: Scheduler, executor,
@@ -134,12 +158,26 @@ def serve_online(scheduler: Scheduler, executor,
               for r in requests}
     result = OnlineResult(traces=traces, outputs={})
     clock = 0.0
+    n_rejected = 0
     passes_now = getattr(scheduler, "supports_time", False)
+    bm = getattr(scheduler, "block_manager", None)
 
     def release(req: Request):
         executor.release(req)
-        traces[req.req_id].finish = clock
+        tr = traces[req.req_id]
+        tr.finish = clock
+        tr.n_preemptions = req.n_preemptions
+        tr.recompute_tokens = req.recompute_tokens
         result.outputs[req.req_id] = list(req.output)
+
+    def preempt(req: Request):
+        executor.preempt(req)
+        result.n_preemptions += 1
+        # count on the trace NOW (release syncs again): a request still in
+        # flight when the loop stops must not lose its preemption history
+        tr = traces[req.req_id]
+        tr.n_preemptions += 1
+        tr.recompute_tokens += req.context_len   # what recompute will redo
 
     for _ in range(max_iterations):
         while pending and pending[0].arrival_time <= clock:
@@ -147,7 +185,15 @@ def serve_online(scheduler: Scheduler, executor,
         if not pending and not scheduler.has_work:
             break
         kwargs = {"now": clock} if passes_now else {}
+        if getattr(scheduler, "supports_preempt", False):
+            kwargs["preempt_hook"] = preempt
         plan = scheduler.next_plan(admit_hook=executor.admit, **kwargs)
+        # requests the scheduler rejected as unservable at this pool
+        # geometry terminate with no output (vLLM's "ignored" requests)
+        for req in getattr(scheduler, "rejected", [])[n_rejected:]:
+            traces[req.req_id].finish = clock
+            result.outputs[req.req_id] = []
+            n_rejected += 1
         if plan is None:
             if pending:
                 clock = max(clock, pending[0].arrival_time)
@@ -165,7 +211,9 @@ def serve_online(scheduler: Scheduler, executor,
         for rid in tokens:
             traces[rid].token_times.append(clock)
         result.iterations.append(IterationRecord(
-            t0, dt, plan.n_prefill_tokens, plan.n_decode_tokens))
+            t0, dt, plan.n_prefill_tokens, plan.n_decode_tokens,
+            pool_blocks_used=bm.n_used if bm is not None else 0,
+            pool_blocks_total=bm.n_usable if bm is not None else 0))
         scheduler.on_tokens(tokens, release_hook=release)
     result.makespan = clock
     return result
@@ -185,7 +233,9 @@ class OnlineServer:
                  max_prompt_len: Optional[int] = None,
                  token_budget: Optional[int] = None, dtype=jnp.float32,
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
-                 policy_kwargs: Optional[dict] = None):
+                 policy_kwargs: Optional[dict] = None, paged: bool = False,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 watermark: float = 0.0):
         from repro.serving.server import build_engine_and_scheduler
         self.cfg = cfg
         self.policy_name = policy
@@ -193,7 +243,8 @@ class OnlineServer:
             cfg, params, policy=policy, chunk_size=chunk_size,
             n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
             token_budget=token_budget, dtype=dtype, sampling=sampling,
-            seed=seed, policy_kwargs=policy_kwargs)
+            seed=seed, policy_kwargs=policy_kwargs, paged=paged,
+            block_size=block_size, n_blocks=n_blocks, watermark=watermark)
         self.executor = EngineExecutor(self.engine)
 
     def run(self, requests: Sequence[Request], *, warmup: bool = True,

@@ -26,12 +26,20 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                dtype=jnp.float32,
                                sampling: SamplingParams = SamplingParams(),
                                seed: int = 0,
-                               policy_kwargs: Optional[dict] = None):
+                               policy_kwargs: Optional[dict] = None,
+                               paged: bool = False, block_size: int = 16,
+                               n_blocks: Optional[int] = None,
+                               watermark: float = 0.0):
     """Shared construction for the offline Server and OnlineServer.
 
     Orca / request-level submit whole prompts as one 'chunk', so their
     engines compile with C = max prompt length; chunked policies compile
     with C = chunk_size.
+
+    ``paged=True`` builds the engine on the paged KV pool (``repro.cache``)
+    with ONE BlockManager shared between engine and scheduler, so
+    block-aware policies gate admission / reserve decode blocks / preempt
+    against the same free list the engine allocates from.
     """
     if policy not in POLICIES:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
@@ -40,9 +48,15 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     engine = Engine(cfg, params, n_slots=n_slots, max_len=max_len,
                     chunk_size=engine_chunk,
                     decode_slots=max(n_slots - 1, 1), dtype=dtype,
-                    sampling=sampling, seed=seed)
+                    sampling=sampling, seed=seed, paged=paged,
+                    block_size=block_size, n_blocks=n_blocks,
+                    watermark=watermark)
     kw = dict(n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
               chunk_size=chunk_size)
+    if engine.block_manager is not None:
+        # the scheduler gates admission / reserves / preempts against the
+        # SAME free list the engine allocates from
+        kw["block_manager"] = engine.block_manager
     if token_budget is not None:
         if policy not in BUDGETED_POLICIES:
             raise ValueError(f"token_budget is only supported by "
@@ -85,14 +99,17 @@ class Server:
                  chunk_size: int = 256, n_slots: int = 8,
                  max_len: int = 4096, max_prompt_len: Optional[int] = None,
                  token_budget: Optional[int] = None, dtype=jnp.float32,
-                 sampling: SamplingParams = SamplingParams(), seed: int = 0):
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None, watermark: float = 0.0):
         self.cfg = cfg
         self.policy_name = policy
         self.engine, self.scheduler = build_engine_and_scheduler(
             cfg, params, policy=policy, chunk_size=chunk_size,
             n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
             token_budget=token_budget, dtype=dtype, sampling=sampling,
-            seed=seed)
+            seed=seed, paged=paged, block_size=block_size,
+            n_blocks=n_blocks, watermark=watermark)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 100_000) -> ServeResult:
@@ -107,9 +124,20 @@ class Server:
             self.engine.release(req.req_id)
             result.outputs[req.req_id] = list(req.output)
 
+        kwargs = {}
+        if getattr(self.scheduler, "supports_preempt", False):
+            kwargs["preempt_hook"] = \
+                lambda req: self.engine.release(req.req_id)
+
         it = 0
+        n_rejected = 0
         while self.scheduler.has_work and it < max_iterations:
-            plan = self.scheduler.next_plan(admit_hook=admit)
+            plan = self.scheduler.next_plan(admit_hook=admit, **kwargs)
+            # block-aware rejection (prompt can never fit the pool):
+            # terminate with empty output instead of vanishing
+            for req in getattr(self.scheduler, "rejected", [])[n_rejected:]:
+                result.outputs[req.req_id] = []
+                n_rejected += 1
             if plan is None:
                 break
             tokens = self.engine.execute(plan)

@@ -223,3 +223,37 @@ def chunked_prefill_total(cfg, hw, prompt_len: int, chunk: int,
         t += prefill_time(cfg, hw, n, start, n_chips)
         start += n
     return t
+
+
+# --------------------------------------------------------------------------
+# KV-memory capacity model (dense rows vs paged block pool)
+# --------------------------------------------------------------------------
+def kv_budget_bytes(cfg, hw: Hardware, n_chips: int = 1,
+                    dtype_bytes: int = BYTES) -> float:
+    """HBM left for KV after the (tensor-sharded) weights: the budget both
+    cache layouts are compared at."""
+    weights = cfg.param_count() * dtype_bytes / max(n_chips, 1)
+    return max(hw.hbm_capacity - weights, 0.0)
+
+
+def kv_pool_tokens(cfg, hbm_bytes: float, dtype_bytes: int = BYTES) -> int:
+    """Cached token positions a KV budget can back (0-KV archs -> 2**62)."""
+    per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    return int(hbm_bytes // per_tok) if per_tok else 1 << 62
+
+
+def dense_capacity(cfg, hbm_bytes: float, max_len: int,
+                   dtype_bytes: int = BYTES) -> int:
+    """Concurrent requests a DENSE slot cache admits: every slot reserves
+    a full ``max_len`` row regardless of actual context."""
+    return kv_pool_tokens(cfg, hbm_bytes, dtype_bytes) // max(max_len, 1)
+
+
+def paged_capacity(cfg, hbm_bytes: float, block_size: int, seq_len: int,
+                   dtype_bytes: int = BYTES) -> int:
+    """Concurrent requests a PAGED pool admits at ``seq_len`` context:
+    each holds only ``ceil(seq_len / block_size)`` blocks (one block is
+    reserved scratch)."""
+    n_blocks = kv_pool_tokens(cfg, hbm_bytes, dtype_bytes) // block_size
+    per_req = -(-max(seq_len, 1) // block_size)
+    return max(n_blocks - 1, 0) // per_req

@@ -20,6 +20,7 @@ class Hardware:
     mem_eff: float = 0.77        # achieved fraction of HBM bandwidth
     kernel_overhead: float = 5e-6  # fixed per-op launch/dispatch cost (s)
     tile: int = 128              # matmul tile (thread-block tile / MXU edge)
+    hbm_capacity: float = 80e9   # bytes of device memory per chip
 
     @property
     def flops_per_byte(self) -> float:
@@ -27,10 +28,13 @@ class Hardware:
         return self.peak_flops / self.hbm_bw
 
 
-A6000 = Hardware("A6000", peak_flops=155e12, hbm_bw=768e9, link_bw=56e9)
-A100 = Hardware("A100-80GB", peak_flops=312e12, hbm_bw=2039e9, link_bw=300e9)
+A6000 = Hardware("A6000", peak_flops=155e12, hbm_bw=768e9, link_bw=56e9,
+                 hbm_capacity=48e9)
+A100 = Hardware("A100-80GB", peak_flops=312e12, hbm_bw=2039e9, link_bw=300e9,
+                hbm_capacity=80e9)
 # TPU v5e — the deployment target (constants fixed by the assignment).
 TPU_V5E = Hardware("TPUv5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
-                   matmul_eff=0.8, mem_eff=0.8, kernel_overhead=2e-6)
+                   matmul_eff=0.8, mem_eff=0.8, kernel_overhead=2e-6,
+                   hbm_capacity=16e9)
 
 PROFILES = {h.name.lower(): h for h in (A6000, A100, TPU_V5E)}

@@ -13,14 +13,12 @@ makespan — the quantities behind the paper's 6.29x bubble reduction and
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import IterationPlan
 from repro.scheduler.policies import Scheduler
-from repro.scheduler.request import Request, State
 from repro.sim.cost_model import BatchSpec, DecodeSeg, PrefillSeg, \
     iteration_time
 from repro.sim.hardware import Hardware

@@ -3,7 +3,6 @@ dry-run shape)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax

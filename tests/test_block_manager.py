@@ -1,0 +1,123 @@
+"""BlockManager property tests: allocation soundness, watermark discipline,
+free-list round trips (runs under real hypothesis or the _prop shim)."""
+import pytest
+
+from _prop import given, settings, strategies as st
+from repro.cache import BlockManager, PoolExhausted
+
+
+def _fill(bm: BlockManager, sizes):
+    """Allocate a request per entry of ``sizes`` (token counts), stopping
+    at the first that no longer fits; returns the admitted req_ids."""
+    admitted = []
+    for rid, n in enumerate(sizes):
+        if not bm.can_allocate(n, watermark=False):
+            break
+        bm.ensure(rid, n)
+        admitted.append(rid)
+    return admitted
+
+
+@given(n_blocks=st.integers(min_value=2, max_value=64),
+       block_size=st.integers(min_value=1, max_value=32),
+       sizes=st.lists(st.integers(min_value=1, max_value=100),
+                      min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_no_double_allocation(n_blocks, block_size, sizes):
+    """No physical block is ever owned twice, and the reserved scratch
+    block never leaves the free list."""
+    bm = BlockManager(n_blocks, block_size)
+    _fill(bm, sizes)
+    owned = [b for t in (bm.table(r) for r in range(len(sizes))) for b in t]
+    assert len(owned) == len(set(owned))
+    assert bm.scratch_block not in owned
+    assert all(0 < b < n_blocks for b in owned)
+    assert len(owned) + bm.n_free == bm.n_usable
+
+
+@given(n_blocks=st.integers(min_value=2, max_value=64),
+       block_size=st.integers(min_value=1, max_value=32),
+       sizes=st.lists(st.integers(min_value=1, max_value=100),
+                      min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_free_returns_all_blocks(n_blocks, block_size, sizes):
+    bm = BlockManager(n_blocks, block_size)
+    admitted = _fill(bm, sizes)
+    for rid in admitted:
+        held = len(bm.table(rid))
+        assert bm.free(rid) == held
+        assert bm.free(rid) == 0            # idempotent double-free
+    assert bm.n_free == bm.n_usable
+    assert bm.n_used == 0
+    # the whole pool is allocatable again
+    assert bm.can_allocate(bm.n_usable * block_size, watermark=False)
+
+
+@given(n_blocks=st.integers(min_value=4, max_value=64),
+       watermark=st.floats(min_value=0.0, max_value=0.9),
+       sizes=st.lists(st.integers(min_value=1, max_value=64),
+                      min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_watermark_never_exceeded(n_blocks, watermark, sizes):
+    """Admission-gated allocation always leaves >= watermark_blocks free."""
+    bm = BlockManager(n_blocks, 4, watermark=watermark)
+    for rid, n in enumerate(sizes):
+        if bm.can_allocate(n, watermark=True):
+            bm.ensure(rid, n)
+            assert bm.n_free >= bm.watermark_blocks
+    assert bm.n_free >= 0
+
+
+@given(n_blocks=st.integers(min_value=3, max_value=64),
+       block_size=st.integers(min_value=1, max_value=32),
+       n_tokens=st.integers(min_value=1, max_value=200),
+       grow=st.integers(min_value=0, max_value=100))
+@settings(max_examples=60, deadline=None)
+def test_block_table_round_trip(n_blocks, block_size, n_tokens, grow):
+    """The table always covers exactly ceil(tokens / block_size) blocks, in
+    stable order: growth appends, it never reshuffles existing entries —
+    the invariant that makes already-written KV stay addressable."""
+    bm = BlockManager(n_blocks, block_size)
+    try:
+        bm.ensure(7, n_tokens)
+    except PoolExhausted:
+        assert bm.blocks_for_tokens(n_tokens) > bm.n_free
+        return
+    t0 = bm.table(7)
+    assert len(t0) == bm.blocks_for_tokens(n_tokens)
+    assert bm.allocated_tokens(7) >= n_tokens
+    try:
+        bm.ensure(7, n_tokens + grow)
+    except PoolExhausted:
+        return
+    t1 = bm.table(7)
+    assert t1[:len(t0)] == t0                    # growth only appends
+    assert len(t1) == bm.blocks_for_tokens(n_tokens + grow)
+    # padded view round-trips the table and scratch-pads the rest
+    M = len(t1) + 3
+    padded = bm.padded_table(7, M)
+    assert list(padded[:len(t1)]) == t1
+    assert all(b == bm.scratch_block for b in padded[len(t1):])
+
+
+def test_ensure_is_idempotent_and_exhaustion_raises():
+    bm = BlockManager(4, 2)                     # 3 usable blocks
+    t = bm.ensure(0, 3)                         # 2 blocks
+    assert bm.ensure(0, 3) == t                 # reservation replay: no-op
+    assert bm.n_free == 1
+    with pytest.raises(PoolExhausted):
+        bm.ensure(1, 5)                         # needs 3 > 1 free
+    assert bm.n_free == 1                       # failed alloc takes nothing
+    bm.ensure(1, 2)
+    assert bm.n_free == 0
+    assert not bm.can_append(0, 5)
+    assert bm.can_append(0, 4)                  # already covered
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        BlockManager(1, 4)
+    with pytest.raises(ValueError):
+        BlockManager(8, 0)
+    with pytest.raises(ValueError):
+        BlockManager(8, 4, watermark=1.0)

@@ -165,3 +165,62 @@ def test_replay_matches_offline_sarathi_plans():
              for c in b.chunks]
         assert [(d.req_id, d.ctx) for d in a.decodes] == \
             [(d.req_id, d.ctx) for d in b.decodes]
+
+
+def test_all_decodes_fit_when_budget_covers_them():
+    """Regression: the decode cap is computed against the FULL budget, not
+    a per-decode-decremented one — with token_budget == max_decodes every
+    decoding request gets its token each iteration."""
+    sched = SarathiServeScheduler(n_slots=10, max_decodes=10,
+                                  chunk_size=4, token_budget=10)
+    for _ in range(10):
+        sched.submit(Request(prompt=[1, 2], max_new_tokens=5))
+    # drive everything into DECODING
+    while any(r.state != State.DECODING for r in sched.running) \
+            or sched.waiting:
+        plan = sched.next_plan()
+        sched.on_tokens({c.req_id: 1 for c in plan.chunks if c.is_last})
+    plan = sched.next_plan()
+    assert len(plan.decodes) == 10
+
+
+def test_block_aware_admission_rejects_never_fitting_prompt():
+    """A prompt that can NEVER fit the pool (even drained) must be
+    rejected, not wedge the FCFS queue in front of servable requests."""
+    from repro.cache import BlockManager
+    bm = BlockManager(11, 4, watermark=0.2)       # 10 usable, floor 2
+    sched = SarathiServeScheduler(n_slots=4, max_decodes=3, chunk_size=8,
+                                  token_budget=11, block_manager=bm)
+    giant = Request(prompt=[1] * 33, max_new_tokens=2)   # 9 > 10 - 2 blocks
+    small = Request(prompt=[1] * 8, max_new_tokens=2)
+    recorded = []
+    drive(sched, [giant, small], lambda plan, n: recorded.append(plan))
+    assert giant in sched.rejected and giant.done and not giant.output
+    assert small.done and len(small.output) == 2
+    assert bm.n_used == 0
+
+
+def test_preempted_request_readmits_past_watermark():
+    """Appends ignore the watermark, so a preempted request may be larger
+    than the fresh-admission threshold; readmission must use append
+    semantics or the request starves after eviction."""
+    from repro.cache import BlockManager
+    bm = BlockManager(11, 4, watermark=0.2)       # floor 2 of 10 usable
+    sched = SarathiServeScheduler(n_slots=2, max_decodes=1, chunk_size=40,
+                                  token_budget=41, block_manager=bm)
+    req = Request(prompt=[1] * 30, max_new_tokens=6)
+    sched.submit(req)
+    plan = sched.next_plan()
+    assert plan is not None and plan.chunks          # admitted + prefilled
+    sched.on_tokens({req.req_id: 1})
+    # decode to ctx 34 then preempt: 34 tokens -> 9 blocks > 10 - 2
+    for _ in range(3):
+        plan = sched.next_plan()
+        sched.on_tokens({d.req_id: 1 for d in plan.decodes})
+    assert not req.done
+    sched._preempt(req)
+    assert req.n_preemptions == 1 and bm.n_used == 0
+    # readmission bypasses the watermark (append semantics): finishes
+    drive(sched, [], lambda plan, n: None)
+    assert req.done and req not in sched.rejected
+    assert len(req.output) == 6

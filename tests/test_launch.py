@@ -1,7 +1,6 @@
 """Sharding-policy unit tests (no 512-device requirement: specs only)."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED, get_config

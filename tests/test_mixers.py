@@ -5,12 +5,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _prop import given, settings, strategies as st
 
 from repro.configs import ASSIGNED
 from repro.models import blocks as bk
-from repro.models import common as cm
 
 
 # --------------------------------------------------------------------- SSD

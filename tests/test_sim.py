@@ -87,3 +87,26 @@ def test_pipeline_sarathi_reduces_bubbles():
     assert results["sarathi"].median_request_bubble < \
         results["orca"].median_request_bubble / 2
     assert results["sarathi"].makespan < results["orca"].makespan * 0.9
+
+
+def test_kv_capacity_paged_beats_dense_at_equal_hbm():
+    """At one HBM budget the paged pool admits ~max_len/seq_len x more
+    concurrent requests than dense max_len-row slots (fragmentation win),
+    and block-size overhead only costs fractions of a block per request."""
+    from repro.sim.cost_model import (dense_capacity, kv_budget_bytes,
+                                      kv_pool_tokens, paged_capacity)
+    cfg = llama_13b()
+    budget = kv_budget_bytes(cfg, A100)
+    assert 0 < budget < A100.hbm_capacity
+    max_len = 4096
+    dense = dense_capacity(cfg, budget, max_len)
+    assert dense >= 1
+    for seq_len, min_gain in [(256, 12.0), (1024, 3.5), (4096, 0.99)]:
+        paged = paged_capacity(cfg, budget, 128, seq_len)
+        assert paged / dense >= min_gain, (seq_len, paged, dense)
+    # smaller blocks -> strictly no less capacity at short contexts
+    assert paged_capacity(cfg, budget, 16, 100) >= \
+        paged_capacity(cfg, budget, 128, 100)
+    # sanity: the pool token count follows the per-token KV footprint
+    assert kv_pool_tokens(cfg, budget) == int(
+        budget // cfg.kv_bytes_per_token())

@@ -9,7 +9,7 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-from benchmarks.roofline import model_flops, roofline_row, scan_correction
+from benchmarks.roofline import roofline_row
 
 GiB = 1 << 30
 MiB = 1 << 20
