@@ -1,0 +1,134 @@
+"""Benchmark regression gate for CI.
+
+Diffs freshly generated ``BENCH_*.json`` artifacts against the baselines
+committed under ``benchmarks/baselines/`` and FAILS (exit 1) when any
+row's ``throughput`` drops by more than ``--tol`` (default 20%) relative
+to its baseline row.
+
+Only *deterministic* benchmarks are gated: the latency and memory sweeps
+run the serving loop against the analytical cost model, so their numbers
+are machine-independent and a drop is a real scheduling/composition
+regression, not runner noise.  Wall-clock benchmarks (``pipeline_bubbles``
+measures real stage times) are reported but never gated.
+
+    PYTHONPATH=src python -m benchmarks.check_regression           # gate
+    PYTHONPATH=src python -m benchmarks.check_regression --update  # rebase
+
+Rows are matched positionally (every sweep emits rows in a deterministic
+order) and their identity fields — every non-metric value — must agree
+exactly; a mismatch means the sweep's shape changed and the baseline must
+be regenerated with ``--update``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import shutil
+import sys
+
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+
+# benches whose rows come from the deterministic cost model
+GATED_BENCHES = {"latency_sweep", "memory_sweep"}
+# the regression-gated metric; latency statistics (p50_ttft, p99_tbt, ...)
+# drift legitimately with composition changes, so they neither gate nor
+# pin identity.  EVERYTHING else — including float config knobs like the
+# sweep's `rate` — is an identity field that must agree exactly, so rows
+# matched by position are guaranteed to describe the same sweep point.
+METRIC = "throughput"
+_STAT_FIELD = re.compile(r"^(p\d+|mean|max|min)(_|$)")
+
+
+def _identity(row: dict) -> dict:
+    return {k: v for k, v in row.items()
+            if k != METRIC and not _STAT_FIELD.match(k)}
+
+
+def compare(base: dict, fresh: dict, tol: float) -> list:
+    """-> list of human-readable regression messages."""
+    errors = []
+    name = base.get("bench", "?")
+    brows, frows = base.get("rows", []), fresh.get("rows", [])
+    if len(brows) != len(frows):
+        return [f"{name}: row count changed {len(brows)} -> {len(frows)} "
+                f"(rerun with --update if intentional)"]
+    for i, (b, f) in enumerate(zip(brows, frows)):
+        if _identity(b) != _identity(f):
+            errors.append(f"{name} row {i}: identity fields changed "
+                          f"{_identity(b)} -> {_identity(f)}")
+            continue
+        if METRIC not in b or METRIC not in f:
+            continue
+        bv, fv = float(b[METRIC]), float(f[METRIC])
+        if bv > 0 and fv < bv * (1.0 - tol):
+            errors.append(
+                f"{name} row {i} ({_identity(b)}): {METRIC} regressed "
+                f"{bv:.6g} -> {fv:.6g} ({fv / bv - 1.0:+.1%}, "
+                f"tolerance -{tol:.0%})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly generated "
+                         "BENCH_*.json files")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed relative throughput drop (0.20 = 20%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh artifacts over the baselines instead "
+                         "of gating")
+    args = ap.parse_args(argv)
+
+    fresh_dir = pathlib.Path(args.fresh_dir)
+    base_dir = pathlib.Path(args.baseline_dir)
+
+    if args.update:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        copied = 0
+        for f in sorted(fresh_dir.glob("BENCH_*.json")):
+            payload = json.loads(f.read_text())
+            if payload.get("bench") not in GATED_BENCHES:
+                print(f"skip {f.name} (bench {payload.get('bench')!r} is "
+                      f"wall-clock / ungated)")
+                continue
+            shutil.copy(f, base_dir / f.name)
+            print(f"baseline updated: {base_dir / f.name}")
+            copied += 1
+        if not copied:
+            print("no gated BENCH_*.json artifacts found to update",
+                  file=sys.stderr)
+            return 1
+        return 0
+
+    baselines = sorted(base_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {base_dir}; seed them with --update",
+              file=sys.stderr)
+        return 1
+    errors, checked = [], 0
+    for bf in baselines:
+        base = json.loads(bf.read_text())
+        if base.get("bench") not in GATED_BENCHES:
+            continue
+        ff = fresh_dir / bf.name
+        if not ff.exists():
+            errors.append(f"{bf.name}: fresh artifact missing in "
+                          f"{fresh_dir} (benchmark not run?)")
+            continue
+        fresh = json.loads(ff.read_text())
+        errors.extend(compare(base, fresh, args.tol))
+        checked += 1
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        print(f"ok: {checked} benchmark artifact(s) within "
+              f"{args.tol:.0%} of baseline")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

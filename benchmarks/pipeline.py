@@ -1,0 +1,186 @@
+"""Measured-vs-predicted pipeline-bubble sweep (paper §5.3, Fig. 12).
+
+Runs the SAME mixed workload through the REAL pipeline-parallel engine
+(`repro.core.PipelineEngine` over ``--pp`` stage devices, forced host
+devices on CPU) under two batch compositions:
+
+* ``chunked``   — decode-maximal micro-batches from the ``sarathi_serve``
+  scheduler (ONE prefill chunk + piggybacked decodes, uniform compute per
+  micro-batch; consecutive chunks of a prompt stream back-to-back);
+* ``unchunked`` — the Orca-style baseline: whole-prompt prefill
+  micro-batches interleaved with decode-only micro-batches (non-uniform).
+
+The workload is bimodal to sustain the mixed prefill/decode phase the
+paper's pipeline argument is about: half "chat" requests (short prompt,
+long decode) keep a decode population alive for the whole run, half
+"doc" requests (long prompt, short decode) keep prefill work flowing
+through it.  Uniform-burst workloads separate into a pure-prefill and a
+pure-decode phase and do not discriminate the schedulers.
+
+Each micro-batch's per-stage service time is measured on the wall clock
+and replayed on a virtual pipeline clock (`repro.serving.metrics.
+PipelineStats`), giving a *measured* bubble fraction.  The cross-check —
+``predicted_bubble_fraction`` per row — is `repro.sim.pipeline` over the
+same workload and scheduler at PAPER scale: the FULL ``--arch`` model on
+``--hw``, where prefill compute dominates the weight fetch.  (The
+measured engine is a reduced CPU model — absolute times differ wildly,
+but the §5.3 claim is directional: chunked decode-maximal batches show
+the lower bubble fraction in both columns.)
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python -m benchmarks.pipeline --pp 4
+
+(The script sets XLA_FLAGS itself when unset — it must be exported before
+the first jax import, which is why all jax-touching imports are deferred.)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from benchmarks.latency import write_bench_json
+
+ROW_FIELDS = ("mode", "policy", "pp", "measured_bubble_fraction",
+              "predicted_bubble_fraction", "measured_makespan",
+              "n_microbatches", "throughput", "p99_tbt")
+
+
+def bimodal_workload(n, *, vocab_size, seed, chat_len=(16, 32),
+                     chat_dec=(32, 48), doc_len=(384, 512), doc_dec=(8, 16)):
+    """``n`` alternating chat (short prompt / long decode) and doc (long
+    prompt / short decode) requests, all arriving at t=0."""
+    import numpy as np
+
+    from repro.scheduler import Request
+    rng = np.random.default_rng(seed)
+
+    def draw(lo_hi):
+        return int(rng.integers(lo_hi[0], lo_hi[1] + 1))
+
+    reqs = []
+    for i in range(n):
+        plen, dlen = ((draw(chat_len), draw(chat_dec)) if i % 2 == 0
+                      else (draw(doc_len), draw(doc_dec)))
+        reqs.append(Request(
+            prompt=[int(t) for t in rng.integers(0, vocab_size, plen)],
+            max_new_tokens=dlen, arrival_time=0.0))
+    return reqs
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--hw", default="a100-80gb",
+                    help="hardware profile for the sim cross-check")
+    ap.add_argument("--pp", type=int, default=4)
+    ap.add_argument("--n", type=int, default=16, help="requests")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--n-layers", type=int, default=None,
+                    help="measured stack depth (default 2*pp groups)")
+    ap.add_argument("--d-model", type=int, default=128,
+                    help="width of the reduced measured model")
+    ap.add_argument("--doc-min", type=int, default=384)
+    ap.add_argument("--doc-max", type=int, default=512)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the measured engine on the paged KV pool")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_pipeline.json",
+                    help="machine-readable artifact path ('' disables)")
+    args = ap.parse_args(argv)
+
+    # must land before the first jax call locks the device count
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.pp}")
+
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.scheduler import POLICIES
+    from repro.serving import OnlineServer
+    from repro.sim.hardware import PROFILES
+    from repro.sim.pipeline import simulate_pipeline
+
+    if args.hw.lower() not in PROFILES:
+        ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
+    hw = PROFILES[args.hw.lower()]
+    full_cfg = get_config(args.arch)
+    n_layers = args.n_layers or 2 * args.pp
+    base = full_cfg.reduced()
+    heads = max(base.n_heads // 2, 1)
+    cfg = dataclasses.replace(
+        base, n_layers=n_layers, d_model=args.d_model, n_heads=heads,
+        n_kv_heads=min(base.n_kv_heads, heads),
+        head_dim=args.d_model // heads, d_ff=2 * args.d_model,
+        vocab_size=min(base.vocab_size, 512))
+    params = build_model(cfg).init_params(jax.random.PRNGKey(args.seed))
+
+    def workload():
+        return bimodal_workload(args.n, vocab_size=cfg.vocab_size,
+                                seed=args.seed,
+                                doc_len=(args.doc_min, args.doc_max))
+
+    max_ctx = max(len(r.prompt) + r.max_new_tokens for r in workload())
+    max_len = -(-(max_ctx + 1) // 64) * 64          # block-size aligned
+    # spread the decoding population over the pp in-flight micro-batches:
+    # pp concurrent micro-batches x (cap decodes + 1 chunk request) fill
+    # the slots exactly, so no single micro-batch swallows every decode
+    # (§5.3 composition)
+    max_decodes = max(args.slots // args.pp - 1, 1)
+
+    print(",".join(ROW_FIELDS))
+    rows = []
+    measured = {}
+    for mode, policy in [("chunked", "sarathi_serve"),
+                         ("unchunked", "orca")]:
+        # decode-maximal composition: ONE chunk per micro-batch (multi-
+        # chunk budget plans would run as several C-wide sub-steps and
+        # break the uniform-duration property §5.3 relies on); the decode
+        # cap is per-micro-batch, not per-engine, so backoff is off
+        pkw = ({"admit_backoff": False, "max_chunks_per_iter": 1}
+               if policy == "sarathi_serve" else None)
+        srv = OnlineServer(cfg, params, policy=policy,
+                           chunk_size=args.chunk, n_slots=args.slots,
+                           max_len=max_len, max_prompt_len=args.doc_max,
+                           pp=args.pp, paged=args.paged, seed=args.seed,
+                           max_decodes=max_decodes, policy_kwargs=pkw)
+        res = srv.run(workload())
+        s = res.summary()
+        # discrete-event prediction: same schedule at PAPER scale
+        kw = dict(n_slots=args.slots, max_decodes=max_decodes,
+                  chunk_size=args.chunk, **(pkw or {}))
+        sched = POLICIES[policy](**kw)
+        for r in workload():
+            sched.submit(r)
+        sim = simulate_pipeline(full_cfg, hw, sched, pp=args.pp)
+        predicted = (sim.total_bubble / (args.pp * sim.makespan)
+                     if sim.makespan > 0 else 0.0)
+        st = res.pipeline
+        measured[mode] = st.bubble_fraction
+        row = dict(mode=mode, policy=policy, pp=args.pp,
+                   measured_bubble_fraction=st.bubble_fraction,
+                   predicted_bubble_fraction=predicted,
+                   measured_makespan=st.makespan,
+                   n_microbatches=st.n_microbatches,
+                   throughput=s.throughput, p99_tbt=s.tbt.p99)
+        rows.append(row)
+        print(",".join(f"{row[f]:.6g}" if isinstance(row[f], float)
+                       else str(row[f]) for f in ROW_FIELDS))
+    verdict = measured["chunked"] < measured["unchunked"]
+    print(f"# chunked bubble {measured['chunked']:.1%} "
+          f"{'<' if verdict else '>='} unchunked "
+          f"{measured['unchunked']:.1%} — "
+          f"{'matches' if verdict else 'CONTRADICTS'} the §5.3 prediction",
+          file=sys.stderr)
+    if args.json:
+        write_bench_json(args.json, name="pipeline_bubbles",
+                         params=vars(args), rows=rows)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,14 +5,18 @@ delay are measured on the wall clock and summarised as percentiles.
     PYTHONPATH=src python examples/serve_online.py \
         [--arch tinyllama-1.1b] [--n 8] [--rate 8.0] [--policy sarathi_serve]
 
+``--pp N`` serves on the pipeline-parallel engine instead: the layer stack
+is partitioned over N stages (forced host devices on CPU — the script sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` when unset, which
+is why jax is imported only after argument parsing), up to N micro-batches
+are in flight, and the summary gains a per-stage bubble line.
+
 (Offline counterpart — static request list, no clock: serve_offline.py.)
 """
 import argparse
+import os
 
-import jax
-
-from repro.configs import get_config, list_archs
-from repro.serving import OnlineServer, format_table, online_workload
+from repro.configs import list_archs
 
 
 def main():
@@ -34,10 +38,23 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=None,
                     help="pool size (default: dense-equivalent capacity; "
                          "shrink to exercise preemption)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages (1 = single device)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
+    if args.pp > 1:
+        # must land before the first jax call locks the device count
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.pp}")
+
+    import jax
+
+    from repro.configs import get_config
     from repro.models import build_model
+    from repro.serving import OnlineServer, format_table, online_workload
+
+    cfg = get_config(args.arch).reduced()
     params = build_model(cfg).init_params(jax.random.PRNGKey(args.seed))
 
     reqs = online_workload(args.n, rate=args.rate, pd_ratio=8.0,
@@ -47,7 +64,8 @@ def main():
                        chunk_size=args.chunk, n_slots=args.slots,
                        token_budget=args.budget, max_len=512,
                        max_prompt_len=64, paged=args.paged,
-                       block_size=args.block_size, n_blocks=args.n_blocks)
+                       block_size=args.block_size, n_blocks=args.n_blocks,
+                       pp=args.pp)
     res = srv.run(reqs)
 
     hybrid = sum(1 for it in res.iterations
@@ -59,6 +77,11 @@ def main():
              f"util mean={res.mean_pool_util:.0%} "
              f"peak={res.peak_pool_util:.0%}, "
              f"preemptions={res.n_preemptions})" if args.paged else ""))
+    if res.pipeline is not None:
+        st = res.pipeline
+        print(f"pp={st.pp} microbatches={st.n_microbatches} "
+              f"bubble={st.bubble_fraction:.1%} "
+              f"stage_busy=[{', '.join(f'{b:.2f}s' for b in st.stage_busy)}]")
     print(format_table(res.summary(), unit="ms"))
     for rid in sorted(res.traces):
         t = res.traces[rid]

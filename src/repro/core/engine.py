@@ -5,8 +5,11 @@ packed step of static shape ``(C, D)`` (C = chunk size, D = decode slots).
 Every kind of engine iteration — pure chunked prefill, pure decode batch, or
 a decode-maximal hybrid — is the same compiled computation:
 
-* an iteration without a prefill chunk sets ``chunk_len = 0`` and points the
-  chunk at a scratch cache row (its writes are harmless and discarded);
+* an iteration WITHOUT a prefill chunk runs a decode-only ``(0, D)``
+  specialisation of the same step function (jit re-specialises on the packed
+  shape): pure-decode iterations skip the C-wide scratch matmuls entirely
+  instead of paying for a masked-out chunk lane.  ``warmup`` compiles both
+  shapes;
 * an iteration with fewer than D decodes pads the decode list with scratch
   rows;
 * a final partial chunk of a prompt is padded to C with ``chunk_len`` masking
@@ -29,7 +32,7 @@ the paged KV's padding writes land in the reserved scratch *block*.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -198,15 +201,20 @@ class Engine:
         # wipe any stale state left by a previous occupant of this slot
         # (ring-buffer positions, SSM/LRU recurrent state); full-attention
         # KV rows self-heal under the causal mask but are wiped too.
-        self.cache = self._reset_slot(self.cache, jnp.int32(slot))
+        self._wipe_slot(slot)
         if memory is not None:
-            if self.cfg.family == "encdec":
-                memory = self.model.encode(self.params, memory[None])[0]
-            self.cache = self._seed_cross(self.params, self.cache,
-                                          memory, slot)
+            self._seed_memory(memory, slot)
         elif self.model.needs_memory:
             raise ValueError(f"{self.cfg.name} requires frontend embeddings")
         return slot
+
+    def _wipe_slot(self, slot: int):
+        self.cache = self._reset_slot(self.cache, jnp.int32(slot))
+
+    def _seed_memory(self, memory, slot: int):
+        if self.cfg.family == "encdec":
+            memory = self.model.encode(self.params, memory[None])[0]
+        self.cache = self._seed_cross(self.params, self.cache, memory, slot)
 
     def release(self, req_id: int):
         slot = self._slot_of.pop(req_id)
@@ -252,17 +260,28 @@ class Engine:
         return out
 
     def warmup(self):
-        """Compile the packed step (scratch chunk row, no decodes — the same
-        static shape as every real iteration) WITHOUT consuming PRNG or
-        iteration state, so a warmed engine replays a cold one exactly even
-        under stochastic sampling."""
+        """Compile both packed-step shapes — the hybrid ``(C, D)`` step (on
+        a scratch chunk row) and the decode-only ``(0, D)`` step — WITHOUT
+        consuming PRNG or iteration state, so a warmed engine replays a
+        cold one exactly even under stochastic sampling."""
         key, n = self._key, self.iterations
+        self._execute_packed(None, [], pad_chunk=True)
         self._execute_packed(None, [])
         self._key, self.iterations = key, n
 
-    def _execute_packed(self, chunk: Optional[ChunkWork],
-                        decodes: Sequence[DecodeWork]) -> Dict[int, int]:
-        ct = np.zeros((self.C,), np.int32)
+    def _pack(self, chunk: Optional[ChunkWork],
+              decodes: Sequence[DecodeWork],
+              pad_chunk: bool = False) -> PackedBatch:
+        """Host-side batch assembly shared by the single-device and
+        pipeline engines: static-shape token/slot arrays plus (when paged)
+        the per-request block tables, allocating what this iteration's
+        writes need.
+
+        A chunk-less iteration packs a ZERO-width chunk lane (the
+        decode-only shape) unless ``pad_chunk`` forces the C-wide scratch
+        lane (warmup's hybrid-shape compile)."""
+        C_w = self.C if (chunk is not None or pad_chunk) else 0
+        ct = np.zeros((C_w,), np.int32)
         if chunk:
             ct[:len(chunk.tokens)] = chunk.tokens
             c_slot = self._slot_of[chunk.req_id]
@@ -296,18 +315,16 @@ class Engine:
                 bm.ensure(w.req_id, w.ctx + 1)
                 db[i] = bm.padded_table(w.req_id, M)
 
-        pk = PackedBatch(
+        return PackedBatch(
             chunk_tokens=jnp.asarray(ct), chunk_slot=jnp.int32(c_slot),
             chunk_start=jnp.int32(c_start), chunk_len=jnp.int32(c_len),
             decode_tokens=jnp.asarray(dt), decode_slots=jnp.asarray(ds),
             decode_ctx=jnp.asarray(dc), chunk_blocks=jnp.asarray(cb),
             decode_blocks=jnp.asarray(db))
 
-        self._key, sub = jax.random.split(self._key)
-        chunk_tok, dec_tok, self.cache = self._step(
-            self.params, pk, self.cache, sub)
-        self.iterations += 1
-
+    @staticmethod
+    def _collect(chunk: Optional[ChunkWork], decodes: Sequence[DecodeWork],
+                 chunk_tok, dec_tok) -> Dict[int, int]:
         out: Dict[int, int] = {}
         if chunk and chunk.is_last and chunk_tok is not None:
             out[chunk.req_id] = int(chunk_tok)
@@ -316,3 +333,13 @@ class Engine:
             for i, w in enumerate(decodes):
                 out[w.req_id] = int(dec_tok[i])
         return out
+
+    def _execute_packed(self, chunk: Optional[ChunkWork],
+                        decodes: Sequence[DecodeWork],
+                        pad_chunk: bool = False) -> Dict[int, int]:
+        pk = self._pack(chunk, decodes, pad_chunk)
+        self._key, sub = jax.random.split(self._key)
+        chunk_tok, dec_tok, self.cache = self._step(
+            self.params, pk, self.cache, sub)
+        self.iterations += 1
+        return self._collect(chunk, decodes, chunk_tok, dec_tok)

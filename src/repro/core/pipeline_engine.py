@@ -1,0 +1,165 @@
+"""Pipeline-parallel SARATHI execution engine (paper §5.3, operational).
+
+The discrete-event simulator (``repro.sim.pipeline``) *predicts* that
+uniform decode-maximal micro-batches shrink pipeline bubbles; this engine
+*executes* that schedule.  The layer stack is partitioned into ``pp``
+stages (``repro.launch.pipeline``), each stage owns its own slice of the
+KV / state cache — dense rows or paged block pools alike — on its own
+device, and every packed sub-step of an :class:`IterationPlan` flows
+through the stages as one micro-batch.
+
+Contract: drop-in for :class:`repro.core.engine.Engine` —
+``add_request`` / ``release`` / ``execute(plan)`` / ``warmup`` behave
+identically, and token outputs are BIT-identical to the single-device
+engine on the same plan sequence (the stage partition slices the layer
+scan without altering any per-layer computation, and the PRNG key is
+split per packed sub-step in the same order).
+
+Timing: stages run sequentially in-process (one micro-batch at a time,
+stage by stage), which is *result*-equivalent to overlapped execution
+because concurrent in-flight micro-batches touch disjoint requests (the
+scheduler locks a request while its micro-batch is in flight), so their
+cache writes commute.  Each stage call is measured on the wall clock —
+including the activation transfer onto the stage's device, i.e. the real
+P2P hop — and ``execute_timed`` hands the per-stage durations to the
+serving loop, which reconstructs stage occupancy / bubbles on a virtual
+pipeline clock (:class:`repro.serving.metrics.PipelineStats`) with exactly
+the recurrence the simulator uses.  Measured bubbles are therefore
+directly comparable to ``sim.pipeline`` predictions
+(``benchmarks/pipeline.py``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import BlockManager
+from repro.configs.base import ModelConfig
+from repro.core.engine import ChunkWork, DecodeWork, Engine, IterationPlan
+from repro.core.sampling import SamplingParams, sample
+
+
+class PipelineEngine(Engine):
+    """``Engine`` over a ``pp``-stage partition of the layer stack, one
+    (host or accelerator) device per stage."""
+
+    def __init__(self, cfg: ModelConfig, params, *, pp: int, n_slots: int,
+                 max_len: int, chunk_size: int, decode_slots: int,
+                 dtype=jnp.float32,
+                 sampling: SamplingParams = SamplingParams(),
+                 seed: int = 0, paged: bool = False,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 watermark: float = 0.0,
+                 block_manager: Optional[BlockManager] = None,
+                 devices: Optional[Sequence] = None):
+        from repro.launch import pipeline as pl
+        super().__init__(cfg, params, n_slots=n_slots, max_len=max_len,
+                         chunk_size=chunk_size, decode_slots=decode_slots,
+                         dtype=dtype, sampling=sampling, seed=seed,
+                         paged=paged, block_size=block_size,
+                         n_blocks=n_blocks, watermark=watermark,
+                         block_manager=block_manager)
+        if self.model.needs_memory:
+            raise NotImplementedError(
+                f"{cfg.name}: cross-attention memory seeding is not "
+                f"pipeline-partitioned yet (vlm/encdec)")
+        self.pp = int(pp)
+        self.devices = pl.stage_devices(self.pp, devices)
+        self.stage_params = pl.place_stages(
+            pl.stage_params(cfg, params, self.pp), self.devices)
+        # the monolithic cache from Engine.__init__ is the source of the
+        # per-stage slices (bit-identical initial state), then dropped
+        self.stage_caches = pl.place_stages(
+            pl.stage_cache(cfg, self.cache, self.pp), self.devices)
+        self.cache = None
+        self._stage_fns = []
+        for s in range(self.pp):
+            first, last = s == 0, s == self.pp - 1
+            if last:
+                impl = functools.partial(self._last_stage_impl, first=first)
+            elif first:
+                impl = self._first_stage_impl
+            else:
+                impl = self._mid_stage_impl
+            # per-stage cache (arg 1) is donated: KV updates in place
+            self._stage_fns.append(jax.jit(impl, donate_argnums=(1,)))
+        self._x0 = jnp.zeros((0,), dtype)      # placeholder when pp == 1
+        self._durs = [0.0] * self.pp           # per-stage wall time (s) of
+        #                                        the last execute() call
+
+    # ------------------------------------------------------- stage bodies
+    def _first_stage_impl(self, params, cache, pk, x):
+        # x is the zero-size placeholder; the first stage embeds pk's tokens
+        x, cache, _ = self.model.forward_packed_stage(
+            params, pk, cache, None, first=True, last=False)
+        return x, cache
+
+    def _mid_stage_impl(self, params, cache, pk, x):
+        x, cache, _ = self.model.forward_packed_stage(
+            params, pk, cache, x, first=False, last=False)
+        return x, cache
+
+    def _last_stage_impl(self, params, cache, pk, x, key, *, first):
+        (chunk_logits, decode_logits), cache, _ = \
+            self.model.forward_packed_stage(params, pk, cache, x,
+                                            first=first, last=True)
+        kc, kd = jax.random.split(key)
+        chunk_tok = (sample(chunk_logits[0], kc, self.sampling)
+                     if chunk_logits is not None else None)
+        dec_tok = (sample(decode_logits, kd, self.sampling)
+                   if decode_logits is not None else None)
+        return chunk_tok, dec_tok, cache
+
+    # --------------------------------------------------- engine overrides
+    def _wipe_slot(self, slot: int):
+        s32 = jnp.int32(slot)
+        self.stage_caches = [self._reset_slot(c, s32)
+                             for c in self.stage_caches]
+
+    def _seed_memory(self, memory, slot: int):   # pragma: no cover - guarded
+        raise NotImplementedError("PipelineEngine does not support "
+                                  "frontend-memory architectures yet")
+
+    def _execute_packed(self, chunk: Optional[ChunkWork],
+                        decodes: Sequence[DecodeWork],
+                        pad_chunk: bool = False) -> Dict[int, int]:
+        pk = self._pack(chunk, decodes, pad_chunk)
+        self._key, sub = jax.random.split(self._key)
+        x = self._x0
+        for s, fn in enumerate(self._stage_fns):
+            last = s == self.pp - 1
+            t0 = time.perf_counter()
+            # the activation hop onto this stage's device is part of the
+            # stage's measured time (it IS the P2P transfer)
+            x = jax.device_put(x, self.devices[s])
+            if last:
+                outs = fn(self.stage_params[s], self.stage_caches[s], pk,
+                          x, sub)
+                chunk_tok, dec_tok, self.stage_caches[s] = outs
+                jax.block_until_ready(
+                    [o for o in (chunk_tok, dec_tok) if o is not None])
+            else:
+                x, self.stage_caches[s] = fn(
+                    self.stage_params[s], self.stage_caches[s], pk, x)
+                jax.block_until_ready(x)
+            self._durs[s] += time.perf_counter() - t0
+        self.iterations += 1
+        return self._collect(chunk, decodes, chunk_tok, dec_tok)
+
+    def execute(self, plan: IterationPlan) -> Dict[int, int]:
+        self._durs = [0.0] * self.pp
+        return super().execute(plan)
+
+    def execute_timed(self, plan: IterationPlan) \
+            -> Tuple[Dict[int, int], List[float]]:
+        """Run one iteration; returns ``(tokens, stage_durations)`` where
+        ``stage_durations[s]`` is the measured wall time stage ``s`` spent
+        on this plan (summed over the plan's packed sub-steps) — the
+        micro-batch service times the serving loop's virtual pipeline
+        clock consumes."""
+        out = self.execute(plan)
+        return out, list(self._durs)

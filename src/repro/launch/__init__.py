@@ -1,4 +1,5 @@
 from repro.launch.mesh import batch_axes, make_host_mesh, \
-    make_production_mesh
+    make_pipeline_mesh, make_production_mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh", "batch_axes"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_pipeline_mesh",
+           "batch_axes"]

@@ -25,6 +25,24 @@ def make_host_mesh(model: int = 1):
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_pipeline_mesh(pp: int, model: int = 1, *, devices=None):
+    """``pp`` pipeline stages x ``model`` TP chips per stage.
+
+    Stage ``s`` owns the device row ``mesh.devices[s]``; the PP engine
+    places its per-stage params/cache there.  On CPU CI the stage devices
+    come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import numpy as np
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < pp * model:
+        raise ValueError(
+            f"pipeline mesh {pp}x{model} needs {pp * model} devices, have "
+            f"{len(devs)}; set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={pp * model} before the first jax call")
+    arr = np.asarray(devs[: pp * model]).reshape(pp, model)
+    return jax.sharding.Mesh(arr, ("stage", "model"))
+
+
 def batch_axes(multi_pod: bool):
     """Mesh axes over which the global batch is sharded."""
     return ("pod", "data") if multi_pod else ("data",)

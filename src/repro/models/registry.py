@@ -3,7 +3,6 @@ config, the public modelling API used by the engine / launcher / tests."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
 
 import jax.numpy as jnp
 
@@ -34,6 +33,11 @@ class Model:
 
     def forward_packed(self, params, pk: PackedBatch, cache):
         return stack.forward_packed(self.cfg, params, pk, cache)
+
+    def forward_packed_stage(self, params, pk: PackedBatch, cache, x, *,
+                             first: bool, last: bool):
+        return stack.forward_packed_stage(self.cfg, params, pk, cache, x,
+                                          first=first, last=last)
 
     def encode(self, params, frontend_embeds):
         return stack.encode(self.cfg, params, frontend_embeds)

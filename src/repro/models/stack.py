@@ -437,25 +437,81 @@ def forward_batched(cfg: ModelConfig, params, tokens, cache=None, start=None,
 
 def forward_packed(cfg: ModelConfig, params, pk: PackedBatch, cache):
     """SARATHI hybrid step.  Returns (chunk_logits [1,V] | None,
-    decode_logits [D,V] | None, new_cache, aux)."""
-    x = jnp.take(params["embed"], pk.token_ids(), axis=0)   # [T, d]
+    decode_logits [D,V] | None, new_cache, aux).
+
+    The monolithic forward IS the one-stage pipeline: it delegates to
+    :func:`forward_packed_stage` with ``first=last=True``, so there is a
+    single copy of the cached layer-scan + logits code and the pp-stage
+    composition is bit-identical by construction."""
+    (chunk_logits, decode_logits), new_cache, aux = forward_packed_stage(
+        cfg, params, pk, cache, None, first=True, last=True)
+    return chunk_logits, decode_logits, new_cache, aux
+
+
+def forward_packed_stage(cfg: ModelConfig, params, pk: PackedBatch, cache,
+                         x, *, first: bool, last: bool):
+    """One pipeline-parallel stage of :func:`forward_packed`.
+
+    ``params`` / ``cache`` hold a contiguous slice of the grouped layers
+    (plus the embedding on the first stage and the tail layers / final norm
+    / unembedding on the last — see ``repro.launch.pipeline``).  The first
+    stage embeds ``pk``'s tokens and ignores ``x``; interior stages take
+    and return the ``[T, d]`` residual stream; the last stage returns
+    ``(chunk_logits, decode_logits)`` exactly like :func:`forward_packed`.
+
+    Composing the stages in order is BIT-identical to the monolithic
+    forward: the group scan is sliced, not altered — every per-layer
+    computation is byte-for-byte the one :func:`_run_layers` runs, and the
+    residual carry crosses stage boundaries unchanged
+    (tests/test_stage_partition.py pins this exactly).
+    """
+    group_kinds, _, tail_kinds = group_split(cfg)
+    if first:
+        x = jnp.take(params["embed"], pk.token_ids(), axis=0)
 
     def apply_fn(kind, p, c, x):
         return apply_layer_packed(cfg, kind, p, x, c, pk)
 
-    x, new_cache, aux = _run_layers(cfg, params, cache, x, apply_fn,
-                                    remat=False)
+    aux = jnp.float32(0.0)
+    new_cache = {}
+    if "groups" in cache:
+        def group_body(carry, xs):
+            x, aux = carry
+            if _CACHE_ACT_SPEC is not None:
+                x = jax.lax.with_sharding_constraint(x, _CACHE_ACT_SPEC)
+            gp, gc = xs
+            new_gc = []
+            for j, kind in enumerate(group_kinds):
+                x, nc, a = apply_fn(kind, gp[j], gc[j], x)
+                new_gc.append(nc)
+                aux = aux + a
+            return (x, aux), new_gc
+
+        (x, aux), new_groups = jax.lax.scan(
+            group_body, (x, aux), (params["groups"], cache["groups"]),
+            unroll=_scan_unroll())
+        new_cache["groups"] = new_groups
+    if "tail" in cache:
+        new_tail = []
+        for j, kind in enumerate(tail_kinds):
+            x, nc, a = apply_fn(kind, params["tail"][j], cache["tail"][j], x)
+            new_tail.append(nc)
+            aux = aux + a
+        new_cache["tail"] = new_tail
+    if not last:
+        return x, new_cache, aux
+
     x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
     C, D = pk.num_chunk, pk.num_decode
     if C:
         # last *valid* chunk row (the chunk may be padded past chunk_len)
-        last = jax.lax.dynamic_slice_in_dim(
+        last_row = jax.lax.dynamic_slice_in_dim(
             x, jnp.maximum(pk.chunk_len - 1, 0), 1, axis=0)
-        chunk_logits = _unembed(cfg, params, last)
+        chunk_logits = _unembed(cfg, params, last_row)
     else:
         chunk_logits = None
     decode_logits = _unembed(cfg, params, x[C:]) if D else None
-    return chunk_logits, decode_logits, new_cache, aux
+    return (chunk_logits, decode_logits), new_cache, aux
 
 
 def encode(cfg: ModelConfig, params, frontend_embeds):

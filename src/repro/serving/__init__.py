@@ -1,16 +1,19 @@
 from repro.serving.server import IterationStats, Server, ServeResult
 from repro.serving.online import (CostModelExecutor, EngineExecutor,
                                   IterationRecord, OnlineResult, OnlineServer,
-                                  serve_online)
-from repro.serving.metrics import (RequestTrace, ServingSummary, Stat,
-                                   format_table, percentile, summarize)
+                                  serve_online, serve_online_pipelined)
+from repro.serving.metrics import (PipelineStats, RequestTrace,
+                                   ServingSummary, Stat, format_table,
+                                   percentile, summarize)
 from repro.serving.workload import (online_workload, poisson_arrivals,
                                     trace_arrivals, uniform_arrivals)
 
 __all__ = [
     "Server", "ServeResult", "IterationStats",
     "OnlineServer", "OnlineResult", "IterationRecord", "serve_online",
+    "serve_online_pipelined",
     "EngineExecutor", "CostModelExecutor",
+    "PipelineStats",
     "RequestTrace", "ServingSummary", "Stat", "percentile", "summarize",
     "format_table",
     "online_workload", "poisson_arrivals", "uniform_arrivals",

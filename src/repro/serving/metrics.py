@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Iterable, List, Optional, Sequence
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -73,6 +73,75 @@ class RequestTrace:
         return len(self.token_times)
 
 
+@dataclass
+class PipelineStats:
+    """Per-stage occupancy of a pipeline-parallel serving run.
+
+    The real engine executes micro-batches stage-by-stage and *measures*
+    each stage's service time (``PipelineEngine.execute_timed``); this
+    class replays those measured durations on a virtual pipeline clock
+    with exactly the recurrence ``repro.sim.pipeline`` uses — a stage
+    starts a micro-batch when both the stage is free and the previous
+    stage has finished it — so measured bubble fractions are directly
+    comparable to the simulator's predictions (benchmarks/pipeline.py).
+    The activation hop between stages is inside the measured durations
+    (it is the real device-to-device transfer), so no separate P2P term
+    is added here.
+    """
+    pp: int
+    stage_free: List[float] = field(default_factory=list)
+    stage_busy: List[float] = field(default_factory=list)
+    n_microbatches: int = 0
+
+    def __post_init__(self):
+        if not self.stage_free:
+            self.stage_free = [0.0] * self.pp
+        if not self.stage_busy:
+            self.stage_busy = [0.0] * self.pp
+
+    def advance_head(self, t: float):
+        """Idle the first stage until ``t`` (arrival gap / lock drain)."""
+        self.stage_free[0] = max(self.stage_free[0], t)
+
+    def inject(self, t_ready: float, durations: Sequence[float]) -> float:
+        """Stream one micro-batch (per-stage measured ``durations``) into
+        the pipeline no earlier than ``t_ready``; returns its drain time
+        off the last stage (when its tokens exist / its requests unlock).
+        """
+        if len(durations) != self.pp:
+            raise ValueError(f"expected {self.pp} durations, "
+                             f"got {len(durations)}")
+        t_prev: Optional[float] = None
+        for s, dt in enumerate(durations):
+            start = max(self.stage_free[s],
+                        t_ready if t_prev is None else t_prev)
+            self.stage_busy[s] += dt
+            self.stage_free[s] = start + dt
+            t_prev = self.stage_free[s]
+        self.n_microbatches += 1
+        return t_prev
+
+    @property
+    def makespan(self) -> float:
+        return max(self.stage_free)
+
+    @property
+    def stage_idle(self) -> List[float]:
+        m = self.makespan
+        return [m - b for b in self.stage_busy]
+
+    @property
+    def total_bubble(self) -> float:
+        return sum(self.stage_idle)
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle share of total stage-time — the §5.3 pipeline bubble
+        metric (0 = perfectly full pipeline)."""
+        m = self.makespan
+        return self.total_bubble / (self.pp * m) if m > 0 else 0.0
+
+
 @dataclass(frozen=True)
 class Stat:
     """Summary statistics of one latency distribution."""
@@ -106,6 +175,9 @@ class ServingSummary:
     n_preemptions: int = 0
     recompute_tokens: int = 0
     peak_pool_util: float = 0.0
+    # pipeline-parallel stage occupancy (zero for single-stage runs)
+    pp: int = 1
+    bubble_fraction: float = 0.0
 
     @property
     def throughput(self) -> float:
@@ -120,7 +192,8 @@ class ServingSummary:
 
 def summarize(traces: Iterable[RequestTrace],
               makespan: Optional[float] = None,
-              peak_pool_util: float = 0.0) -> ServingSummary:
+              peak_pool_util: float = 0.0,
+              pipeline: Optional[PipelineStats] = None) -> ServingSummary:
     traces = list(traces)
     ttfts = [t.ttft for t in traces if t.ttft is not None]
     tbts = [g for t in traces for g in t.tbts]
@@ -137,7 +210,10 @@ def summarize(traces: Iterable[RequestTrace],
         queue_delay=Stat.of(queues), e2e=Stat.of(e2es),
         n_preemptions=sum(t.n_preemptions for t in traces),
         recompute_tokens=sum(t.recompute_tokens for t in traces),
-        peak_pool_util=peak_pool_util)
+        peak_pool_util=peak_pool_util,
+        pp=pipeline.pp if pipeline is not None else 1,
+        bubble_fraction=(pipeline.bubble_fraction
+                         if pipeline is not None else 0.0))
 
 
 def format_table(s: ServingSummary, unit: str = "s") -> str:
@@ -147,6 +223,8 @@ def format_table(s: ServingSummary, unit: str = "s") -> str:
             ("queue_delay", s.queue_delay), ("e2e", s.e2e)]
     out = [f"requests={s.n_requests} tokens={s.n_tokens} "
            f"makespan={s.makespan:.3f}s throughput={s.throughput:.1f} tok/s",]
+    if s.pp > 1:
+        out.append(f"pp={s.pp} bubble_fraction={s.bubble_fraction:.1%}")
     if s.n_preemptions or s.peak_pool_util:
         out.append(f"preemptions={s.n_preemptions} "
                    f"recompute_tokens={s.recompute_tokens} "

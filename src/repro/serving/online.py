@@ -23,15 +23,17 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import Engine, IterationPlan
+from repro.core.pipeline_engine import PipelineEngine
 from repro.core.sampling import SamplingParams
 from repro.scheduler import Request, Scheduler
-from repro.serving.metrics import RequestTrace, ServingSummary, summarize
+from repro.serving.metrics import (PipelineStats, RequestTrace,
+                                   ServingSummary, summarize)
 
 
 # --------------------------------------------------------------------------
@@ -124,6 +126,7 @@ class OnlineResult:
     iterations: List[IterationRecord] = field(default_factory=list)
     makespan: float = 0.0
     n_preemptions: int = 0
+    pipeline: Optional[PipelineStats] = None   # set by the pipelined loop
 
     @property
     def peak_pool_util(self) -> float:
@@ -139,7 +142,8 @@ class OnlineResult:
 
     def summary(self) -> ServingSummary:
         return summarize(self.traces.values(), makespan=self.makespan,
-                         peak_pool_util=self.peak_pool_util)
+                         peak_pool_util=self.peak_pool_util,
+                         pipeline=self.pipeline)
 
 
 def serve_online(scheduler: Scheduler, executor,
@@ -220,12 +224,136 @@ def serve_online(scheduler: Scheduler, executor,
 
 
 # --------------------------------------------------------------------------
+# the pipelined event loop (pipeline-parallel engine)
+# --------------------------------------------------------------------------
+def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
+                           requests: Sequence[Request], *,
+                           warmup: bool = True,
+                           max_iterations: int = 1_000_000) -> OnlineResult:
+    """Arrival-driven serving over a :class:`PipelineEngine` with
+    ``engine.pp`` micro-batches in flight.
+
+    Iteration-level scheduling with the autoregressive pipeline dependency
+    of ``repro.sim.pipeline``: a request whose micro-batch is still
+    draining the stages is LOCKED — hidden from the scheduler — so each of
+    the ``pp`` in-flight micro-batches carries a disjoint request set, and
+    the scheduler keeps composing fresh decode-maximal micro-batches from
+    the unlocked requests instead of stalling the pipeline.  Time is the
+    virtual pipeline clock of :class:`PipelineStats`, fed with the
+    *measured* per-stage durations of every micro-batch; a token completes
+    (TTFT/TBT event) when its micro-batch drains the LAST stage, and the
+    per-stage busy/idle ledger is the engine-side counterpart of the
+    simulator's bubble accounting.
+    """
+    if warmup:
+        engine.warmup()                     # compile stages off the clock
+    stats = PipelineStats(engine.pp)
+    pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
+    traces = {r.req_id: RequestTrace(r.req_id, r.arrival_time)
+              for r in requests}
+    result = OnlineResult(traces=traces, outputs={}, pipeline=stats)
+    locked: Dict[int, float] = {}           # req_id -> drain (unlock) time
+    n_rejected = 0
+    passes_now = getattr(scheduler, "supports_time", False)
+    bm = getattr(scheduler, "block_manager", None)
+    drain_clock = 0.0                       # time of the newest drain event
+
+    def admit(req: Request):
+        engine.add_request(req.req_id, memory=req.memory)
+
+    def release(req: Request):
+        engine.release(req.req_id)
+        tr = traces[req.req_id]
+        tr.finish = drain_clock
+        tr.n_preemptions = req.n_preemptions
+        tr.recompute_tokens = req.recompute_tokens
+        result.outputs[req.req_id] = list(req.output)
+
+    def preempt(req: Request):
+        engine.release(req.req_id)
+        result.n_preemptions += 1
+        tr = traces[req.req_id]
+        tr.n_preemptions += 1
+        tr.recompute_tokens += req.context_len
+
+    for _ in range(max_iterations):
+        now = stats.stage_free[0]           # next injection opportunity
+        while pending and pending[0].arrival_time <= now:
+            scheduler.submit(pending.pop(0))
+        if not pending and not scheduler.has_work:
+            break
+        for rid in [r for r, t in locked.items() if t <= now]:
+            del locked[rid]
+        # in-flight requests are invisible to the scheduler until drained;
+        # they still occupy engine slots, so the visible slot budget
+        # shrinks with them (or admission would overflow the engine)
+        hidden = [r for r in scheduler.running if r.req_id in locked]
+        scheduler.running = [r for r in scheduler.running
+                             if r.req_id not in locked]
+        scheduler.n_slots -= len(hidden)
+        kwargs = {"now": now} if passes_now else {}
+        if getattr(scheduler, "supports_preempt", False):
+            kwargs["preempt_hook"] = preempt
+        try:
+            plan = scheduler.next_plan(admit_hook=admit, **kwargs)
+        finally:
+            scheduler.n_slots += len(hidden)
+            scheduler.running.extend(hidden)
+        for req in getattr(scheduler, "rejected", [])[n_rejected:]:
+            traces[req.req_id].finish = now
+            result.outputs[req.req_id] = []
+            n_rejected += 1
+        if plan is None:
+            events = [t for t in locked.values()]
+            if pending:
+                events.append(pending[0].arrival_time)
+            if not events:
+                if scheduler.has_work:      # pragma: no cover - safety net
+                    raise RuntimeError("scheduler stalled with work queued")
+                break
+            stats.advance_head(min(events))
+            continue
+        tokens, durs = engine.execute_timed(plan)
+        drain = stats.inject(now, durs)
+        drain_clock = drain
+        ids = [c.req_id for c in plan.chunks] + \
+            [d.req_id for d in plan.decodes]
+        # autoregressive dependency: only token-producing work (decodes,
+        # last chunks) waits for the drain; a NON-last prefill chunk's
+        # successor chunk may enter the very next micro-batch — it meets
+        # its predecessor's KV at each stage strictly after the
+        # predecessor wrote it (in-order pipeline), so consecutive chunks
+        # of one prompt stream back-to-back (§5.3)
+        for c in plan.chunks:
+            if c.is_last:
+                locked[c.req_id] = drain
+        for d in plan.decodes:
+            locked[d.req_id] = drain
+        for rid in ids:
+            traces[rid].mark_scheduled(now)
+        for rid in tokens:
+            traces[rid].token_times.append(drain)
+        result.iterations.append(IterationRecord(
+            now, drain - now, plan.n_prefill_tokens, plan.n_decode_tokens,
+            pool_blocks_used=bm.n_used if bm is not None else 0,
+            pool_blocks_total=bm.n_usable if bm is not None else 0))
+        scheduler.on_tokens(tokens, release_hook=release)
+    result.makespan = stats.makespan
+    return result
+
+
+# --------------------------------------------------------------------------
 # convenience wrapper: real engine + budget scheduler
 # --------------------------------------------------------------------------
 class OnlineServer:
     """Online counterpart of :class:`repro.serving.Server`: same engine,
     arrival-driven loop, latency metrics.  Default policy is the
-    token-budget ``sarathi_serve`` scheduler."""
+    token-budget ``sarathi_serve`` scheduler.
+
+    ``pp > 1`` serves on a :class:`PipelineEngine` through the pipelined
+    event loop (:func:`serve_online_pipelined`): up to ``pp`` micro-batches
+    in flight, per-stage bubble accounting on ``result.pipeline``.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *,
                  policy: str = "sarathi_serve", chunk_size: int = 256,
@@ -235,7 +363,8 @@ class OnlineServer:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  policy_kwargs: Optional[dict] = None, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 watermark: float = 0.0):
+                 watermark: float = 0.0, pp: int = 1, devices=None,
+                 max_decodes: Optional[int] = None):
         from repro.serving.server import build_engine_and_scheduler
         self.cfg = cfg
         self.policy_name = policy
@@ -244,11 +373,16 @@ class OnlineServer:
             n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, policy_kwargs=policy_kwargs, paged=paged,
-            block_size=block_size, n_blocks=n_blocks, watermark=watermark)
+            block_size=block_size, n_blocks=n_blocks, watermark=watermark,
+            pp=pp, devices=devices, max_decodes=max_decodes)
         self.executor = EngineExecutor(self.engine)
 
     def run(self, requests: Sequence[Request], *, warmup: bool = True,
             max_iterations: int = 1_000_000) -> OnlineResult:
+        if isinstance(self.engine, PipelineEngine):
+            return serve_online_pipelined(self.scheduler, self.engine,
+                                          requests, warmup=warmup,
+                                          max_iterations=max_iterations)
         if warmup:
             self.executor.warmup()          # compile off the clock
         return serve_online(self.scheduler, self.executor, requests,

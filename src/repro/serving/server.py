@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import Engine
+from repro.core.pipeline_engine import PipelineEngine
 from repro.core.sampling import SamplingParams
 from repro.scheduler import (BUDGETED_POLICIES, CHUNKED_POLICIES, POLICIES,
                              Request)
@@ -29,7 +30,9 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                policy_kwargs: Optional[dict] = None,
                                paged: bool = False, block_size: int = 16,
                                n_blocks: Optional[int] = None,
-                               watermark: float = 0.0):
+                               watermark: float = 0.0, pp: int = 1,
+                               devices=None,
+                               max_decodes: Optional[int] = None):
     """Shared construction for the offline Server and OnlineServer.
 
     Orca / request-level submit whole prompts as one 'chunk', so their
@@ -40,18 +43,37 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     with ONE BlockManager shared between engine and scheduler, so
     block-aware policies gate admission / reserve decode blocks / preempt
     against the same free list the engine allocates from.
+
+    ``pp > 1`` builds a :class:`repro.core.PipelineEngine` — the layer
+    stack partitioned over ``pp`` stage devices (``devices`` or the first
+    local ones) — which keeps the exact same execute contract and token
+    outputs, and additionally measures per-stage service times for the
+    pipelined serving loop's bubble accounting.
+
+    ``max_decodes`` caps the decodes the SCHEDULER piggybacks per
+    iteration (default: every decoding request, ``n_slots - 1``).  With a
+    pipelined engine a smaller cap (~``n_slots / pp``) spreads the
+    decoding population over the in-flight micro-batches instead of
+    clustering it into one — the composition §5.3 assumes.  The engine's
+    decode lanes stay ``n_slots - 1`` (a superset), so the compiled shape
+    does not depend on the cap.
     """
     if policy not in POLICIES:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
     engine_chunk = chunk_size if policy in CHUNKED_POLICIES else \
         (max_prompt_len or max_len)
-    engine = Engine(cfg, params, n_slots=n_slots, max_len=max_len,
-                    chunk_size=engine_chunk,
-                    decode_slots=max(n_slots - 1, 1), dtype=dtype,
-                    sampling=sampling, seed=seed, paged=paged,
-                    block_size=block_size, n_blocks=n_blocks,
-                    watermark=watermark)
-    kw = dict(n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
+    ekw = dict(n_slots=n_slots, max_len=max_len, chunk_size=engine_chunk,
+               decode_slots=max(n_slots - 1, 1), dtype=dtype,
+               sampling=sampling, seed=seed, paged=paged,
+               block_size=block_size, n_blocks=n_blocks,
+               watermark=watermark)
+    if pp > 1:
+        engine = PipelineEngine(cfg, params, pp=pp, devices=devices, **ekw)
+    else:
+        engine = Engine(cfg, params, **ekw)
+    kw = dict(n_slots=n_slots,
+              max_decodes=(max_decodes if max_decodes is not None
+                           else max(n_slots - 1, 1)),
               chunk_size=chunk_size)
     if engine.block_manager is not None:
         # the scheduler gates admission / reserves / preempts against the
@@ -101,7 +123,8 @@ class Server:
                  token_budget: Optional[int] = None, dtype=jnp.float32,
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  paged: bool = False, block_size: int = 16,
-                 n_blocks: Optional[int] = None, watermark: float = 0.0):
+                 n_blocks: Optional[int] = None, watermark: float = 0.0,
+                 pp: int = 1, devices=None):
         self.cfg = cfg
         self.policy_name = policy
         self.engine, self.scheduler = build_engine_and_scheduler(
@@ -109,7 +132,7 @@ class Server:
             n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, paged=paged, block_size=block_size,
-            n_blocks=n_blocks, watermark=watermark)
+            n_blocks=n_blocks, watermark=watermark, pp=pp, devices=devices)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 100_000) -> ServeResult:

@@ -13,8 +13,8 @@ makespan — the quantities behind the paper's 6.29x bubble reduction and
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import IterationPlan
@@ -82,8 +82,13 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
 
     ``tp`` chips per stage split each stage's work (ideal TP).  Micro-batch
     stage time = iteration_time over n_layers/pp layers.  A simple P2P
-    activation transfer cost is added between stages.
+    activation transfer cost is added between stages; the degenerate
+    ``pp=1`` case has no inter-stage links, pays no transfer, and
+    collapses exactly to the sequential single-stage cost model
+    (tests/test_sim.py pins this).
     """
+    if pp < 1:
+        raise ValueError(f"pp must be >= 1, got {pp}")
     stage_free = [0.0] * pp
     ready_at: Dict[int, float] = {}
     req_bubble: Dict[int, float] = {}
@@ -118,12 +123,20 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
             t_next = min(locked.values())
             stage_free[0] = t_next
             continue
-        # temporarily hide locked requests from the scheduler
+        # temporarily hide locked requests from the scheduler; they still
+        # occupy engine slots, so the visible slot budget shrinks with
+        # them (the real pipelined loop does the same — without this the
+        # simulated scheduler admits more concurrency than any engine
+        # could hold)
         hidden = [r for r in scheduler.running if r.req_id in locked]
         scheduler.running = [r for r in scheduler.running
                              if r.req_id not in locked]
-        plan = scheduler.next_plan()
-        scheduler.running.extend(hidden)
+        scheduler.n_slots -= len(hidden)
+        try:
+            plan = scheduler.next_plan()
+        finally:
+            scheduler.n_slots += len(hidden)
+            scheduler.running.extend(hidden)
         if plan is None:
             if locked:
                 stage_free[0] = min(locked.values())
@@ -131,7 +144,7 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
             break
         n_mb += 1
         dt = stage_time(plan)
-        hop = p2p_time(plan)
+        hop = p2p_time(plan) if pp > 1 else 0.0
         ids = [c.req_id for c in plan.chunks] + \
             [d.req_id for d in plan.decodes]
 
@@ -148,12 +161,19 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
             stage_busy[s] += dt
             stage_free[s] = finish
             t_prev_finish = finish
-        # autoregressive dependency: these requests rejoin after drain
-        for rid in ids:
-            locked[rid] = t_prev_finish
-        # feed dummy tokens (content-independent timing model)
+        # autoregressive dependency: a request whose micro-batch SAMPLES a
+        # token (decode, or the last chunk of its prompt) rejoins only
+        # after the drain.  A NON-last prefill chunk has no such
+        # dependency — chunk i+1 needs chunk i's KV at stage s only once
+        # it reaches stage s itself, which in-order injection guarantees —
+        # so consecutive chunks of one prompt stream back-to-back through
+        # the pipeline (the §5.3 mechanism that keeps it full of uniform
+        # micro-batches).
         last_chunk_ids = {c.req_id for c in plan.chunks if c.is_last}
         decode_ids = {d.req_id for d in plan.decodes}
+        for rid in last_chunk_ids | decode_ids:
+            locked[rid] = t_prev_finish
+        # feed dummy tokens (content-independent timing model)
         tokens = {rid: 1 for rid in ids
                   if rid in last_chunk_ids or rid in decode_ids}
         scheduler.on_tokens(tokens)

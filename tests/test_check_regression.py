@@ -1,0 +1,99 @@
+"""benchmarks/check_regression.py: the CI throughput-regression gate."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check_regression import compare, main  # noqa: E402
+
+
+def _payload(bench, rows):
+    return {"bench": bench, "unix_time": 0.0, "params": {}, "rows": rows}
+
+
+def _row(policy, rate, throughput, **kw):
+    return dict(policy=policy, rate=rate, throughput=throughput, **kw)
+
+
+def test_within_tolerance_passes():
+    base = _payload("latency_sweep", [_row("sarathi_serve", 2, 100.0)])
+    fresh = _payload("latency_sweep", [_row("sarathi_serve", 2, 85.0)])
+    assert compare(base, fresh, 0.20) == []
+
+
+def test_regression_beyond_tolerance_fails():
+    base = _payload("latency_sweep", [_row("sarathi_serve", 2, 100.0)])
+    fresh = _payload("latency_sweep", [_row("sarathi_serve", 2, 75.0)])
+    errs = compare(base, fresh, 0.20)
+    assert len(errs) == 1 and "regressed" in errs[0]
+
+
+def test_improvement_passes():
+    base = _payload("latency_sweep", [_row("orca", 8, 50.0)])
+    fresh = _payload("latency_sweep", [_row("orca", 8, 500.0)])
+    assert compare(base, fresh, 0.20) == []
+
+
+def test_identity_field_change_is_flagged():
+    base = _payload("latency_sweep", [_row("sarathi_serve", 2, 100.0)])
+    fresh = _payload("latency_sweep", [_row("orca", 2, 100.0)])
+    errs = compare(base, fresh, 0.20)
+    assert len(errs) == 1 and "identity" in errs[0]
+
+
+def test_row_count_change_is_flagged():
+    base = _payload("latency_sweep", [_row("sarathi_serve", 2, 100.0)])
+    fresh = _payload("latency_sweep", [])
+    errs = compare(base, fresh, 0.20)
+    assert len(errs) == 1 and "row count" in errs[0]
+
+
+def test_latency_stats_do_not_gate():
+    """Latency percentiles drift legitimately; only throughput gates."""
+    base = _payload("latency_sweep",
+                    [_row("sarathi_serve", 2, 100.0, p99_tbt=0.001)])
+    fresh = _payload("latency_sweep",
+                     [_row("sarathi_serve", 2, 99.0, p99_tbt=99.0)])
+    assert compare(base, fresh, 0.20) == []
+
+
+def test_float_config_knobs_pin_identity():
+    """A changed float sweep knob (e.g. --rates) must be flagged as an
+    identity mismatch, not silently compared against the wrong row."""
+    base = _payload("latency_sweep", [_row("sarathi_serve", 2.0, 100.0)])
+    fresh = _payload("latency_sweep", [_row("sarathi_serve", 4.0, 100.0)])
+    errs = compare(base, fresh, 0.20)
+    assert len(errs) == 1 and "identity" in errs[0]
+
+
+def _write(dirpath, name, payload):
+    (dirpath / name).write_text(json.dumps(payload))
+
+
+def test_main_end_to_end(tmp_path):
+    basedir = tmp_path / "baselines"
+    freshdir = tmp_path / "fresh"
+    basedir.mkdir()
+    freshdir.mkdir()
+    _write(basedir, "BENCH_latency.json",
+           _payload("latency_sweep", [_row("sarathi_serve", 2, 100.0)]))
+    # wall-clock benches are never gated, even when present
+    _write(basedir, "BENCH_pipeline.json",
+           _payload("pipeline_bubbles", [_row("chunked", 0, 1.0)]))
+    args = ["--baseline-dir", str(basedir), "--fresh-dir", str(freshdir)]
+
+    assert main(args) == 1                       # fresh artifact missing
+    _write(freshdir, "BENCH_latency.json",
+           _payload("latency_sweep", [_row("sarathi_serve", 2, 95.0)]))
+    assert main(args) == 0                       # within tolerance
+    _write(freshdir, "BENCH_latency.json",
+           _payload("latency_sweep", [_row("sarathi_serve", 2, 10.0)]))
+    assert main(args) == 1                       # regression
+    assert main(args + ["--tol", "0.95"]) == 0   # looser tolerance
+
+    # --update rebases the gated baseline from the fresh artifact
+    assert main(args + ["--update"]) == 0
+    rebased = json.loads((basedir / "BENCH_latency.json").read_text())
+    assert rebased["rows"][0]["throughput"] == 10.0
+    assert main(args) == 0

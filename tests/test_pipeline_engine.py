@@ -1,0 +1,187 @@
+"""PipelineEngine: pp-stage execution must be BIT-identical to the
+single-device Engine (dense and paged, greedy and stochastic sampling),
+and the pipelined online loop must serve workloads to completion with
+sane bubble accounting."""
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+import repro.scheduler.request as request_mod
+from repro.configs import get_config
+from repro.core import PipelineEngine, SamplingParams
+from repro.models import build_model
+from repro.scheduler import Request
+from repro.scheduler.budget import SarathiServeScheduler
+from repro.serving import (OnlineServer, Server, online_workload,
+                           serve_online_pipelined)
+
+_CFG = dataclasses.replace(
+    get_config("tinyllama-1.1b").reduced(), n_layers=4, d_model=32,
+    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+_PARAMS = None
+
+
+def _cfg_params():
+    global _PARAMS
+    if _PARAMS is None:
+        _PARAMS = build_model(_CFG).init_params(jax.random.PRNGKey(0))
+    return _CFG, _PARAMS
+
+
+def _reqs(n=5, seed=0, rate=None):
+    request_mod._ids = itertools.count()     # deterministic req ids
+    if rate is not None:
+        return online_workload(n, rate=rate, pd_ratio=4.0, min_len=6,
+                               max_len=20, vocab_size=_CFG.vocab_size,
+                               seed=seed)
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=[int(t) for t in
+                            rng.integers(0, _CFG.vocab_size,
+                                         int(rng.integers(6, 21)))],
+                    max_new_tokens=int(rng.integers(3, 7)))
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_offline_replay_bit_identical_pp4(paged):
+    """Same workload, same policy: pp=4 token outputs == single-device."""
+    cfg, params = _cfg_params()
+    outs = {}
+    for pp in (1, 4):
+        srv = Server(cfg, params, policy="sarathi", chunk_size=8,
+                     n_slots=4, max_len=64, pp=pp, paged=paged,
+                     block_size=8)
+        outs[pp] = srv.run(_reqs()).outputs
+    assert outs[1] == outs[4]
+    assert all(len(v) > 0 for v in outs[1].values())
+
+
+def test_offline_replay_bit_identical_budget_policy():
+    """Multi-chunk budget plans (several packed sub-steps per iteration)
+    keep the PRNG/sub-step order aligned across engines."""
+    cfg, params = _cfg_params()
+    outs = {}
+    for pp in (1, 3):
+        srv = Server(cfg, params, policy="sarathi_serve", chunk_size=8,
+                     n_slots=4, max_len=64, token_budget=20, pp=pp)
+        outs[pp] = srv.run(_reqs(seed=3)).outputs
+    assert outs[1] == outs[3]
+
+
+def test_stochastic_sampling_bit_identical():
+    """temperature > 0: the per-sub-step PRNG key chain must line up."""
+    cfg, params = _cfg_params()
+    outs = {}
+    for pp in (1, 2):
+        srv = Server(cfg, params, policy="sarathi", chunk_size=8,
+                     n_slots=4, max_len=64, pp=pp, seed=7,
+                     sampling=SamplingParams(temperature=1.0))
+        outs[pp] = srv.run(_reqs(seed=1)).outputs
+    assert outs[1] == outs[2]
+
+
+def test_warmup_replays_cold_engine():
+    """Warmup (both compiled shapes) must not consume PRNG/iteration
+    state: a warmed pipeline engine replays a cold one exactly, even with
+    stochastic sampling.  (Checked on the timing-independent offline
+    replay: the pipelined ONLINE loop schedules off measured durations,
+    which legitimately differ between cold and warm runs.)"""
+    cfg, params = _cfg_params()
+    outs = {}
+    for warm in (False, True):
+        srv = Server(cfg, params, policy="sarathi", chunk_size=8,
+                     n_slots=4, max_len=64, pp=2, seed=5,
+                     sampling=SamplingParams(temperature=1.0))
+        if warm:
+            srv.engine.warmup()
+        outs[warm] = srv.run(_reqs(seed=2)).outputs
+    assert outs[False] == outs[True]
+
+
+def test_pipelined_loop_pp1_matches_serial_loop():
+    """With one stage the pipelined loop IS the serial loop: same plans,
+    same tokens (virtual clocks differ only by measured durations)."""
+    cfg, params = _cfg_params()
+    engine = PipelineEngine(cfg, params, pp=1, n_slots=4, max_len=64,
+                            chunk_size=8, decode_slots=3)
+    sched = SarathiServeScheduler(n_slots=4, max_decodes=3, chunk_size=8)
+    res_p = serve_online_pipelined(sched, engine, _reqs(seed=4, rate=64.0))
+    srv = OnlineServer(cfg, params, policy="sarathi_serve", chunk_size=8,
+                       n_slots=4, max_len=64)
+    res_s = srv.run(_reqs(seed=4, rate=64.0))
+    assert res_p.outputs == res_s.outputs
+    assert res_p.pipeline.pp == 1
+    assert res_p.pipeline.n_microbatches == len(res_p.iterations)
+
+
+def test_pipelined_loop_serves_to_completion_with_bubble_stats():
+    cfg, params = _cfg_params()
+    srv = OnlineServer(cfg, params, policy="sarathi_serve", chunk_size=8,
+                       n_slots=4, max_len=64, pp=2,
+                       policy_kwargs={"max_chunks_per_iter": 1})
+    reqs = _reqs(n=6, seed=6, rate=32.0)
+    res = srv.run(reqs)
+    for r in reqs:
+        assert len(res.outputs[r.req_id]) == r.max_new_tokens
+    st = res.pipeline
+    assert st is not None and st.pp == 2
+    assert st.n_microbatches > 0
+    assert all(b > 0 for b in st.stage_busy)
+    assert st.makespan >= max(st.stage_busy)
+    assert 0.0 <= st.bubble_fraction < 1.0
+    assert res.makespan == st.makespan
+    s = res.summary()
+    assert s.pp == 2 and s.bubble_fraction == st.bubble_fraction
+    assert s.n_tokens == sum(len(v) for v in res.outputs.values())
+
+
+def test_pipelined_loop_paged_pool_pressure():
+    """Paged pipelined serving under a tight pool: preemption/recompute
+    must still drive every request to full completion."""
+    cfg, params = _cfg_params()
+    srv = OnlineServer(cfg, params, policy="sarathi_serve", chunk_size=8,
+                       n_slots=3, max_len=64, pp=2, paged=True,
+                       block_size=8, n_blocks=13)
+    reqs = _reqs(n=5, seed=8, rate=64.0)
+    res = srv.run(reqs)
+    for r in reqs:
+        assert len(res.outputs[r.req_id]) == r.max_new_tokens
+    assert srv.engine.block_manager.n_used == 0   # everything freed
+
+
+def test_rejects_memory_architectures():
+    cfg = get_config("llama-3.2-vision-90b").reduced()
+    params = build_model(cfg).init_params(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        PipelineEngine(cfg, params, pp=2, n_slots=2, max_len=64,
+                       chunk_size=8, decode_slots=1)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=N)")
+def test_stages_live_on_distinct_devices():
+    cfg, params = _cfg_params()
+    engine = PipelineEngine(cfg, params, pp=2, n_slots=2, max_len=64,
+                            chunk_size=8, decode_slots=1)
+    assert engine.devices[0] != engine.devices[1]
+
+    def device_of(tree):
+        leaves = jax.tree.leaves(tree)
+        devs = {next(iter(leaf.devices())) for leaf in leaves}
+        assert len(devs) == 1
+        return devs.pop()
+
+    assert device_of(engine.stage_params[0]) == engine.devices[0]
+    assert device_of(engine.stage_params[1]) == engine.devices[1]
+    assert device_of(engine.stage_caches[0]) == engine.devices[0]
+    assert device_of(engine.stage_caches[1]) == engine.devices[1]
+    # and the split engine still serves correctly
+    srv = Server(cfg, params, policy="sarathi", chunk_size=8, n_slots=4,
+                 max_len=64, pp=2)
+    ref = Server(cfg, params, policy="sarathi", chunk_size=8, n_slots=4,
+                 max_len=64)
+    assert srv.run(_reqs(seed=9)).outputs == ref.run(_reqs(seed=9)).outputs

@@ -110,3 +110,48 @@ def test_kv_capacity_paged_beats_dense_at_equal_hbm():
     # sanity: the pool token count follows the per-token KV footprint
     assert kv_pool_tokens(cfg, budget) == int(
         budget // cfg.kv_bytes_per_token())
+
+
+def _pp1_sched(n=6):
+    request_mod._ids = itertools.count()
+    sched = SarathiScheduler(n_slots=4, max_decodes=3, chunk_size=32)
+    for i in range(n):
+        sched.submit(Request(prompt=[1] * (40 + 7 * i),
+                             max_new_tokens=8))
+    return sched
+
+
+def test_pipeline_pp1_collapses_to_single_stage_cost():
+    """The degenerate pp=1 'pipeline' is the sequential engine: makespan
+    must equal the plain sum of iteration times from the cost model, with
+    zero bubble and NO inter-stage transfer charged (there are no
+    inter-stage links)."""
+    from repro.sim.pipeline import plan_time
+    cfg = gpt3_175b()
+    res = simulate_pipeline(cfg, A100, _pp1_sched(), pp=1)
+
+    # sequential reference: drive the identical schedule, sum plan times
+    sched = _pp1_sched()
+    total = 0.0
+    while sched.has_work:
+        plan = sched.next_plan()
+        if plan is None:
+            break
+        total += plan_time(cfg, A100, plan)
+        last = {c.req_id for c in plan.chunks if c.is_last}
+        dec = {d.req_id for d in plan.decodes}
+        sched.on_tokens({rid: 1 for rid in last | dec})
+    assert res.makespan == pytest.approx(total, rel=1e-12)
+    assert res.stage_idle == [0.0]
+    assert res.total_bubble == 0.0
+    assert res.request_bubble == {}
+
+    # an (absurd) per-token transfer cost must not leak into pp=1
+    res_p2p = simulate_pipeline(cfg, A100, _pp1_sched(), pp=1,
+                                p2p_bytes_per_token=10 ** 12)
+    assert res_p2p.makespan == res.makespan
+
+
+def test_pipeline_rejects_bad_pp():
+    with pytest.raises(ValueError):
+        simulate_pipeline(gpt3_175b(), A100, _pp1_sched(), pp=0)

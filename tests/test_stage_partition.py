@@ -1,0 +1,130 @@
+"""Pipeline stage partitioning (repro.launch.pipeline): any contiguous
+split of the layer stack into pp stages must reassemble to EXACTLY the
+monolithic forward — same logits bit-for-bit, same cache leaves — because
+the partition only slices the group scan, never alters a layer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _prop import given, settings, strategies as st
+from repro.configs import get_config
+from repro.launch import pipeline as lp
+from repro.models import build_model, make_packed
+from repro.models import stack
+
+
+def _tiny(arch: str, n_layers: int):
+    base = get_config(arch).reduced()
+    heads = max(base.n_heads // 2, 1)
+    d = 32
+    return dataclasses.replace(
+        base, n_layers=n_layers, d_model=d, n_heads=heads,
+        n_kv_heads=min(base.n_kv_heads, heads), head_dim=d // heads,
+        d_ff=2 * d, vocab_size=64,
+        lru_width=d if base.family == "hybrid" else base.lru_width)
+
+
+def _pk(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return make_packed(
+        chunk_tokens=list(rng.integers(0, cfg.vocab_size, 8)),
+        chunk_slot=0, chunk_start=0,
+        decode_tokens=list(rng.integers(0, cfg.vocab_size, 2)),
+        decode_slots=[1, 2], decode_ctx=[3, 5])
+
+
+def _compose(cfg, params, pk, pp, rows=4, max_len=32):
+    cache = stack.init_cache(cfg, rows, max_len)
+    sp = lp.stage_params(cfg, params, pp)
+    sc = lp.stage_cache(cfg, cache, pp)
+    x = None
+    out_caches = []
+    for s in range(pp):
+        x, nc, _ = stack.forward_packed_stage(
+            cfg, sp[s], pk, sc[s], x, first=(s == 0), last=(s == pp - 1))
+        out_caches.append(nc)
+    return x, out_caches
+
+
+def _full(cfg, params, pk, rows=4, max_len=32):
+    cache = stack.init_cache(cfg, rows, max_len)
+    return stack.forward_packed(cfg, params, pk, cache)
+
+
+def _assert_tree_equal(a, b, what):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), what
+
+
+def _check_reassembles(cfg, pp):
+    params = build_model(cfg).init_params(jax.random.PRNGKey(0))
+    pk = _pk(cfg)
+    (cl, dl), stage_caches = _compose(cfg, params, pk, pp)
+    full_cl, full_dl, full_cache, _ = _full(cfg, params, pk)
+    assert np.array_equal(np.asarray(cl), np.asarray(full_cl))
+    assert np.array_equal(np.asarray(dl), np.asarray(full_dl))
+    # stage caches concatenated along the group axis == monolithic cache
+    groups = [c["groups"] for c in stage_caches]
+    recombined = jax.tree.map(
+        lambda *leaves: jnp.concatenate(leaves, axis=0), *groups)
+    _assert_tree_equal(recombined, full_cache["groups"], "groups cache")
+    _assert_tree_equal(stage_caches[-1].get("tail", []),
+                       full_cache["tail"], "tail cache")
+
+
+@settings(max_examples=8)
+@given(n_groups=st.integers(min_value=1, max_value=5),
+       pp_raw=st.integers(min_value=1, max_value=5))
+def test_dense_partition_reassembles(n_groups, pp_raw):
+    """Property: dense stack, any (n_groups, pp <= n_groups) partition."""
+    pp = 1 + (pp_raw - 1) % n_groups
+    _check_reassembles(_tiny("tinyllama-1.1b", n_groups), pp)
+
+
+@pytest.mark.parametrize("arch,n_layers,pp", [
+    ("qwen2-0.5b", 4, 2),             # dense + qkv bias
+    ("mamba2-2.7b", 4, 4),            # ssm (no attention cache)
+    ("recurrentgemma-9b", 4, 2),      # hybrid, 2-layer group period
+    ("granite-moe-3b-a800m", 3, 3),   # moe ffn
+    ("stablelm-12b", 4, 3),           # uneven split: 2+1+1 groups
+])
+def test_family_partition_reassembles(arch, n_layers, pp):
+    _check_reassembles(_tiny(arch, n_layers), pp)
+
+
+def test_stage_bounds_balanced_contiguous():
+    for n_groups in range(1, 9):
+        for pp in range(1, n_groups + 1):
+            b = lp.stage_bounds(n_groups, pp)
+            assert len(b) == pp
+            assert b[0][0] == 0 and b[-1][1] == n_groups
+            sizes = [g1 - g0 for g0, g1 in b]
+            assert all(s >= 1 for s in sizes)
+            assert max(sizes) - min(sizes) <= 1
+            assert all(b[i][1] == b[i + 1][0] for i in range(pp - 1))
+
+
+def test_stage_bounds_rejects_oversplit():
+    with pytest.raises(ValueError):
+        lp.stage_bounds(2, 3)
+    with pytest.raises(ValueError):
+        lp.stage_bounds(4, 0)
+
+
+def test_boundary_stage_params_carry_head_and_tail():
+    cfg = _tiny("tinyllama-1.1b", 4)
+    params = build_model(cfg).init_params(jax.random.PRNGKey(0))
+    sp = lp.stage_params(cfg, params, 2)
+    assert "embed" in sp[0] and "final_norm" not in sp[0]
+    assert "final_norm" in sp[1] and "tail" in sp[1]
+    # tied embeddings: the last stage needs the embedding for unembed
+    if cfg.tie_embeddings:
+        assert "embed" in sp[1]
+    else:
+        assert ("unembed" in sp[1]) == ("unembed" in params)
