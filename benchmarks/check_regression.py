@@ -5,14 +5,25 @@ committed under ``benchmarks/baselines/`` and FAILS (exit 1) when any
 row's ``throughput`` drops by more than ``--tol`` (default 20%) relative
 to its baseline row.
 
-Only *deterministic* benchmarks are gated: the latency and memory sweeps
-run the serving loop against the analytical cost model, so their numbers
-are machine-independent and a drop is a real scheduling/composition
-regression, not runner noise.  Wall-clock benchmarks (``pipeline_bubbles``
-measures real stage times) are reported but never gated.
+Only *deterministic* benchmarks are gated on the metric: the latency and
+memory sweeps run the serving loop against the analytical cost model, so
+their numbers are machine-independent and a drop is a real
+scheduling/composition regression, not runner noise.  Wall-clock
+benchmarks (``pipeline_bubbles`` measures real stage times) are
+*identity-pinned* instead: the committed baseline fixes the sweep grid
+(mode x policy x pp x tp) and CI fails when the grid drifts, while the
+machine-dependent numbers are only reported.
 
-    PYTHONPATH=src python -m benchmarks.check_regression           # gate
-    PYTHONPATH=src python -m benchmarks.check_regression --update  # rebase
+    # gate / rebase EVERY checked bench — needs fresh copies of all three
+    # artifacts (latency, memory, AND the 8-device tp x pp pipeline grid)
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --update
+    # restrict to the artifacts a job actually generates (what both CI
+    # jobs do):
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --benches latency_sweep,memory_sweep
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --benches pipeline_bubbles
 
 Rows are matched positionally (every sweep emits rows in a deterministic
 order) and their identity fields — every non-metric value — must agree
@@ -32,6 +43,12 @@ BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 
 # benches whose rows come from the deterministic cost model
 GATED_BENCHES = {"latency_sweep", "memory_sweep"}
+# wall-clock benches whose numbers are machine-dependent: only their sweep
+# SHAPE is pinned — the listed identity fields per row must match the
+# baseline exactly (a changed grid means the baseline needs --update), but
+# no metric is gated.  This keeps the committed tp x pp grid honest
+# without gating on runner timing noise.
+IDENTITY_BENCHES = {"pipeline_bubbles": ("mode", "policy", "pp", "tp")}
 # the regression-gated metric; latency statistics (p50_ttft, p99_tbt, ...)
 # drift legitimately with composition changes, so they neither gate nor
 # pin identity.  EVERYTHING else — including float config knobs like the
@@ -41,7 +58,9 @@ METRIC = "throughput"
 _STAT_FIELD = re.compile(r"^(p\d+|mean|max|min)(_|$)")
 
 
-def _identity(row: dict) -> dict:
+def _identity(row: dict, keys=None) -> dict:
+    if keys is not None:
+        return {k: row.get(k) for k in keys}
     return {k: v for k, v in row.items()
             if k != METRIC and not _STAT_FIELD.match(k)}
 
@@ -50,16 +69,19 @@ def compare(base: dict, fresh: dict, tol: float) -> list:
     """-> list of human-readable regression messages."""
     errors = []
     name = base.get("bench", "?")
+    id_keys = IDENTITY_BENCHES.get(name)
+    gated = name in GATED_BENCHES
     brows, frows = base.get("rows", []), fresh.get("rows", [])
     if len(brows) != len(frows):
         return [f"{name}: row count changed {len(brows)} -> {len(frows)} "
                 f"(rerun with --update if intentional)"]
     for i, (b, f) in enumerate(zip(brows, frows)):
-        if _identity(b) != _identity(f):
+        if _identity(b, id_keys) != _identity(f, id_keys):
             errors.append(f"{name} row {i}: identity fields changed "
-                          f"{_identity(b)} -> {_identity(f)}")
+                          f"{_identity(b, id_keys)} -> "
+                          f"{_identity(f, id_keys)}")
             continue
-        if METRIC not in b or METRIC not in f:
+        if not gated or METRIC not in b or METRIC not in f:
             continue
         bv, fv = float(b[METRIC]), float(f[METRIC])
         if bv > 0 and fv < bv * (1.0 - tol):
@@ -81,25 +103,37 @@ def main(argv=None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="copy fresh artifacts over the baselines instead "
                          "of gating")
+    ap.add_argument("--benches", default=None,
+                    help="comma-separated bench names to check/update "
+                         "(default: every gated + identity-pinned bench); "
+                         "CI jobs that only generate a subset of the "
+                         "artifacts restrict themselves with this")
     args = ap.parse_args(argv)
 
     fresh_dir = pathlib.Path(args.fresh_dir)
     base_dir = pathlib.Path(args.baseline_dir)
+    known = GATED_BENCHES | set(IDENTITY_BENCHES)
+    wanted = set(args.benches.split(",")) if args.benches else known
+    unknown = wanted - known
+    if unknown:
+        print(f"unknown bench(es) {sorted(unknown)}; known: "
+              f"{sorted(known)}", file=sys.stderr)
+        return 1
 
     if args.update:
         base_dir.mkdir(parents=True, exist_ok=True)
         copied = 0
         for f in sorted(fresh_dir.glob("BENCH_*.json")):
             payload = json.loads(f.read_text())
-            if payload.get("bench") not in GATED_BENCHES:
+            if payload.get("bench") not in wanted:
                 print(f"skip {f.name} (bench {payload.get('bench')!r} is "
-                      f"wall-clock / ungated)")
+                      f"not checked / not selected)")
                 continue
             shutil.copy(f, base_dir / f.name)
             print(f"baseline updated: {base_dir / f.name}")
             copied += 1
         if not copied:
-            print("no gated BENCH_*.json artifacts found to update",
+            print("no checkable BENCH_*.json artifacts found to update",
                   file=sys.stderr)
             return 1
         return 0
@@ -112,7 +146,7 @@ def main(argv=None) -> int:
     errors, checked = [], 0
     for bf in baselines:
         base = json.loads(bf.read_text())
-        if base.get("bench") not in GATED_BENCHES:
+        if base.get("bench") not in wanted:
             continue
         ff = fresh_dir / bf.name
         if not ff.exists():

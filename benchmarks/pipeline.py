@@ -27,8 +27,19 @@ measured engine is a reduced CPU model — absolute times differ wildly,
 but the §5.3 claim is directional: chunked decode-maximal batches show
 the lower bubble fraction in both columns.)
 
+``--tp N`` runs every stage tensor-parallel over N chips (``pp x tp``
+devices total): the measured engine shards each stage's params/cache over
+its stage row's ``model`` axis (``repro.sharding``), and the sim
+cross-check charges the per-layer ring all-reduce term
+(``cost_model.tp_allreduce_time``) at the same ``tp`` — the
+``predicted_collective_fraction`` column reports how much of busy
+stage-time the model attributes to TP synchronisation, the knob that
+couples TP degree to bubble size.
+
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         PYTHONPATH=src python -m benchmarks.pipeline --pp 4
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.pipeline --pp 2 --tp 2
 
 (The script sets XLA_FLAGS itself when unset — it must be exported before
 the first jax import, which is why all jax-touching imports are deferred.)
@@ -41,9 +52,9 @@ import sys
 
 from benchmarks.latency import write_bench_json
 
-ROW_FIELDS = ("mode", "policy", "pp", "measured_bubble_fraction",
-              "predicted_bubble_fraction", "measured_makespan",
-              "n_microbatches", "throughput", "p99_tbt")
+ROW_FIELDS = ("mode", "policy", "pp", "tp", "measured_bubble_fraction",
+              "predicted_bubble_fraction", "predicted_collective_fraction",
+              "measured_makespan", "n_microbatches", "throughput", "p99_tbt")
 
 
 def bimodal_workload(n, *, vocab_size, seed, chat_len=(16, 32),
@@ -74,6 +85,9 @@ def main(argv=None) -> None:
     ap.add_argument("--hw", default="a100-80gb",
                     help="hardware profile for the sim cross-check")
     ap.add_argument("--pp", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel chips per stage (pp*tp forced "
+                         "host devices on CPU)")
     ap.add_argument("--n", type=int, default=16, help="requests")
     ap.add_argument("--chunk", type=int, default=64)
     ap.add_argument("--slots", type=int, default=16)
@@ -92,7 +106,8 @@ def main(argv=None) -> None:
 
     # must land before the first jax call locks the device count
     os.environ.setdefault(
-        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.pp}")
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.pp * args.tp}")
 
     import dataclasses
 
@@ -105,6 +120,10 @@ def main(argv=None) -> None:
     from repro.sim.hardware import PROFILES
     from repro.sim.pipeline import simulate_pipeline
 
+    if args.pp < 2:
+        ap.error("--pp must be >= 2: this benchmark measures pipeline "
+                 "bubbles, which need stages to bubble between (single-"
+                 "stage TP latency is benchmarks/latency.py territory)")
     if args.hw.lower() not in PROFILES:
         ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
     hw = PROFILES[args.hw.lower()]
@@ -146,24 +165,28 @@ def main(argv=None) -> None:
         srv = OnlineServer(cfg, params, policy=policy,
                            chunk_size=args.chunk, n_slots=args.slots,
                            max_len=max_len, max_prompt_len=args.doc_max,
-                           pp=args.pp, paged=args.paged, seed=args.seed,
-                           max_decodes=max_decodes, policy_kwargs=pkw)
+                           pp=args.pp, tp=args.tp, paged=args.paged,
+                           seed=args.seed, max_decodes=max_decodes,
+                           policy_kwargs=pkw)
         res = srv.run(workload())
         s = res.summary()
-        # discrete-event prediction: same schedule at PAPER scale
+        # discrete-event prediction: same schedule at PAPER scale, same TP
+        # degree — the sim charges the per-layer all-reduce term, so the
+        # predicted column carries the bubble x TP-collective interaction
         kw = dict(n_slots=args.slots, max_decodes=max_decodes,
                   chunk_size=args.chunk, **(pkw or {}))
         sched = POLICIES[policy](**kw)
         for r in workload():
             sched.submit(r)
-        sim = simulate_pipeline(full_cfg, hw, sched, pp=args.pp)
+        sim = simulate_pipeline(full_cfg, hw, sched, pp=args.pp, tp=args.tp)
         predicted = (sim.total_bubble / (args.pp * sim.makespan)
                      if sim.makespan > 0 else 0.0)
         st = res.pipeline
         measured[mode] = st.bubble_fraction
-        row = dict(mode=mode, policy=policy, pp=args.pp,
+        row = dict(mode=mode, policy=policy, pp=args.pp, tp=args.tp,
                    measured_bubble_fraction=st.bubble_fraction,
                    predicted_bubble_fraction=predicted,
+                   predicted_collective_fraction=sim.collective_fraction,
                    measured_makespan=st.makespan,
                    n_microbatches=st.n_microbatches,
                    throughput=s.throughput, p99_tbt=s.tbt.p99)

@@ -9,7 +9,10 @@ delay are measured on the wall clock and summarised as percentiles.
 is partitioned over N stages (forced host devices on CPU — the script sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` when unset, which
 is why jax is imported only after argument parsing), up to N micro-batches
-are in flight, and the summary gains a per-stage bubble line.
+are in flight, and the summary gains a per-stage bubble line.  ``--tp M``
+makes the engine (or each stage) tensor-parallel over M chips — pp*tp
+devices total; token outputs are bit-identical at tp=1 and tolerance-tier
+equivalent at tp>1 (README §Tensor-parallel x pipeline-parallel).
 
 (Offline counterpart — static request list, no clock: serve_offline.py.)
 """
@@ -40,13 +43,16 @@ def main():
                          "shrink to exercise preemption)")
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline-parallel stages (1 = single device)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel chips (per stage with --pp; "
+                         "pp*tp devices total)")
     args = ap.parse_args()
 
-    if args.pp > 1:
+    if args.pp * args.tp > 1:
         # must land before the first jax call locks the device count
         os.environ.setdefault(
             "XLA_FLAGS",
-            f"--xla_force_host_platform_device_count={args.pp}")
+            f"--xla_force_host_platform_device_count={args.pp * args.tp}")
 
     import jax
 
@@ -65,7 +71,7 @@ def main():
                        token_budget=args.budget, max_len=512,
                        max_prompt_len=64, paged=args.paged,
                        block_size=args.block_size, n_blocks=args.n_blocks,
-                       pp=args.pp)
+                       pp=args.pp, tp=args.tp)
     res = srv.run(reqs)
 
     hybrid = sum(1 for it in res.iterations
@@ -79,7 +85,7 @@ def main():
              f"preemptions={res.n_preemptions})" if args.paged else ""))
     if res.pipeline is not None:
         st = res.pipeline
-        print(f"pp={st.pp} microbatches={st.n_microbatches} "
+        print(f"pp={st.pp} tp={st.tp} microbatches={st.n_microbatches} "
               f"bubble={st.bubble_fraction:.1%} "
               f"stage_busy=[{', '.join(f'{b:.2f}s' for b in st.stage_busy)}]")
     print(format_table(res.summary(), unit="ms"))

@@ -28,6 +28,15 @@ including preemptive release for recompute when the pool runs dry.  Slots
 remain for the O(1)-per-request state (ring windows, SSM/LRU, cross KV);
 the old ``n_slots + 1`` scratch *row* survives only for those leaves, while
 the paged KV's padding writes land in the reserved scratch *block*.
+
+With ``tp > 1`` the engine is tensor-parallel: params and cache (dense and
+paged leaves alike) are placed on a ``(1, tp)`` ``("data", "model")`` mesh
+under the shared :mod:`repro.sharding` policy — the same leaf rules the
+launch stack lowers against — and the jitted packed step SPMD-partitions
+over the ``model`` axis from its argument shardings alone.  ``tp=1`` takes
+the exact unsharded single-device path (bit-identity with prior releases
+is pinned by tests); ``tp>1`` is equivalent only to tolerance tier: TP
+all-reduces legitimately reorder float accumulation (see README §TPxPP).
 """
 from __future__ import annotations
 
@@ -134,8 +143,10 @@ class IterationPlan:
 
 
 class Engine:
-    """Slot-based SARATHI execution engine (single host; the distributed
-    variant lives in repro/launch and shards the same step function)."""
+    """Slot-based SARATHI execution engine.  ``tp`` tensor-parallel chips
+    (``devices``, default the first local ones) shard params/cache under
+    the launch stack's sharding policy (:mod:`repro.sharding`); ``tp=1``
+    is the unsharded single-device path, bit-for-bit."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  max_len: int, chunk_size: int, decode_slots: int,
@@ -144,7 +155,8 @@ class Engine:
                  seed: int = 0, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0,
-                 block_manager: Optional[BlockManager] = None):
+                 block_manager: Optional[BlockManager] = None,
+                 tp: int = 1, devices: Optional[Sequence] = None):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -176,6 +188,20 @@ class Engine:
         else:
             self.blocks_per_seq = 0
             self.cache = self.model.init_cache(n_slots + 1, max_len, dtype)
+        self.tp = int(tp)
+        if self.tp > 1:
+            from repro import sharding as shd
+            shd.check_tp_supported(self.tp, self.paged)
+            self.tp_mesh = shd.make_tp_mesh(self.tp, devices)
+            self.params = shd.shard_params(cfg, self.params, self.tp_mesh)
+            self.cache = shd.shard_cache(cfg, self.cache, self.tp_mesh)
+        else:
+            self.tp_mesh = None
+            if devices:
+                # placement-only (no sharding, no numeric effect): honour
+                # an explicit device request instead of dropping it
+                self.params = jax.device_put(self.params, devices[0])
+                self.cache = jax.device_put(self.cache, devices[0])
         self.sampling = sampling
         self._key = jax.random.PRNGKey(seed)
         self._free: List[int] = list(range(n_slots))

@@ -45,7 +45,14 @@ from repro.core.sampling import SamplingParams, sample
 
 class PipelineEngine(Engine):
     """``Engine`` over a ``pp``-stage partition of the layer stack, one
-    (host or accelerator) device per stage."""
+    (host or accelerator) device per stage — or, with ``tp > 1``, one
+    ``tp``-chip tensor-parallel mesh row per stage (each stage's params
+    and dense/paged cache slices shard over its row's ``model`` axis
+    under the shared :mod:`repro.sharding` policy, and each per-stage
+    jitted step SPMD-partitions accordingly).  Token outputs stay
+    BIT-identical to the single-device engine at ``tp=1``; ``tp>1``
+    matches to the documented tolerance tier (TP all-reduces reorder
+    float accumulation — README §TPxPP)."""
 
     def __init__(self, cfg: ModelConfig, params, *, pp: int, n_slots: int,
                  max_len: int, chunk_size: int, decode_slots: int,
@@ -55,8 +62,11 @@ class PipelineEngine(Engine):
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0,
                  block_manager: Optional[BlockManager] = None,
-                 devices: Optional[Sequence] = None):
+                 tp: int = 1, devices: Optional[Sequence] = None):
         from repro.launch import pipeline as pl
+        # tp is NOT forwarded: the monolithic cache built by Engine.__init__
+        # is only the host-side source of the per-stage slices, which are
+        # sharded per stage row below
         super().__init__(cfg, params, n_slots=n_slots, max_len=max_len,
                          chunk_size=chunk_size, decode_slots=decode_slots,
                          dtype=dtype, sampling=sampling, seed=seed,
@@ -68,13 +78,31 @@ class PipelineEngine(Engine):
                 f"{cfg.name}: cross-attention memory seeding is not "
                 f"pipeline-partitioned yet (vlm/encdec)")
         self.pp = int(pp)
-        self.devices = pl.stage_devices(self.pp, devices)
-        self.stage_params = pl.place_stages(
-            pl.stage_params(cfg, params, self.pp), self.devices)
-        # the monolithic cache from Engine.__init__ is the source of the
-        # per-stage slices (bit-identical initial state), then dropped
-        self.stage_caches = pl.place_stages(
-            pl.stage_cache(cfg, self.cache, self.pp), self.devices)
+        self.tp = int(tp)
+        stage_params = pl.stage_params(cfg, params, self.pp)
+        stage_caches = pl.stage_cache(cfg, self.cache, self.pp)
+        if self.tp > 1:
+            from repro import sharding as shd
+            shd.check_tp_supported(self.tp, self.paged)
+            # stage s = row s of the (pp, tp) pipeline mesh; each row is a
+            # (1, tp) ("data", "model") submesh the shared policy shards
+            # the stage's param/cache slices over
+            self.stage_meshes = shd.stage_tp_meshes(self.pp, self.tp,
+                                                    devices)
+            self.devices = [m.devices[0, 0] for m in self.stage_meshes]
+            self._stage_put = [shd.replicated(m) for m in self.stage_meshes]
+            self.stage_params = [shd.shard_params(cfg, t, m) for t, m
+                                 in zip(stage_params, self.stage_meshes)]
+            self.stage_caches = [shd.shard_cache(cfg, t, m) for t, m
+                                 in zip(stage_caches, self.stage_meshes)]
+        else:
+            self.stage_meshes = None
+            self.devices = pl.stage_devices(self.pp, devices)
+            self._stage_put = list(self.devices)
+            self.stage_params = pl.place_stages(stage_params, self.devices)
+            self.stage_caches = pl.place_stages(stage_caches, self.devices)
+        # the monolithic cache from Engine.__init__ was the source of the
+        # per-stage slices (bit-identical initial state), now dropped
         self.cache = None
         self._stage_fns = []
         for s in range(self.pp):
@@ -133,9 +161,10 @@ class PipelineEngine(Engine):
         for s, fn in enumerate(self._stage_fns):
             last = s == self.pp - 1
             t0 = time.perf_counter()
-            # the activation hop onto this stage's device is part of the
-            # stage's measured time (it IS the P2P transfer)
-            x = jax.device_put(x, self.devices[s])
+            # the activation hop onto this stage's device(s) is part of the
+            # stage's measured time (it IS the P2P transfer); with tp > 1
+            # the target is the stage row's mesh, replicated
+            x = jax.device_put(x, self._stage_put[s])
             if last:
                 outs = fn(self.stage_params[s], self.stage_caches[s], pk,
                           x, sub)

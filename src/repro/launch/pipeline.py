@@ -15,9 +15,12 @@ enough devices exist: stage ``s`` lives on the mesh's ``s``-th device row
 (:func:`stage_devices`).  On CPU CI the stage devices come from
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; when fewer
 devices exist than stages, stages share devices round-robin (placement
-never affects results, only overlap).  TP *within* a stage (the mesh's
-``model`` axis + ``repro.launch.shardings`` pspecs) composes with this
-partition but is not wired into the real engine yet — see ROADMAP.md.
+never affects results, only overlap).  TP *within* a stage composes with
+this partition: ``PipelineEngine(tp=...)`` places each stage's param and
+cache slices over its stage row's ``model`` axis
+(:func:`repro.sharding.stage_tp_meshes` + the shared policy leaf rules),
+so every per-stage jitted step SPMD-partitions over ``tp`` chips while
+the stage slicing stays a pure host-side tree operation.
 """
 from __future__ import annotations
 

@@ -1,222 +1,32 @@
-"""Per-architecture PartitionSpec policy + ShapeDtypeStruct input specs.
+"""Launch-side view of the sharding policy + ShapeDtypeStruct input specs.
 
-Sharding policy (see DESIGN.md §5):
-
-* Megatron TP over the ``model`` axis: attention head projections, FFN
-  hidden dim, vocab (embed/unembed), SSD inner channels/heads, RG-LRU
-  width/gate blocks — sharded only when divisible by the axis size,
-  replicated otherwise (the fallback is recorded per-leaf and revisited in
-  the §Perf hillclimb).
-* MoE expert parallelism over the ``data`` axis when n_experts divides it
-  (llama4 128e/16) + TP over ``model`` inside each expert; otherwise experts
-  replicate and only d_ff shards (granite-moe's 40e).
-* FSDP over ``data`` on d_model dims for dense archs whose TP-sharded
-  weights exceed the per-chip budget (llama-3.2-vision-90b).
-* The ``pod`` axis is pure data parallelism (batch only).
+The PartitionSpec leaf rules live in :mod:`repro.sharding.policy` — ONE
+module shared with the serving engines (``Engine(tp=...)`` /
+``PipelineEngine`` place live params and caches under the same rules this
+launcher lowers against), re-exported here so ``repro.launch.steps`` /
+``dryrun`` keep their historical import path.  This module adds only what
+is launch-specific: the assigned workload input shapes and their sharded
+ShapeDtypeStruct stand-ins.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+# re-exports: the shared policy (axis sizes derived from the mesh in use)
+from repro.sharding.policy import (DATA, MDL, batch_axis_size,  # noqa: F401
+                                   cache_pspecs, kv_shard_mode, mesh_axis,
+                                   param_pspecs, use_fsdp, with_sharding)
 
-MDL = "model"
-DATA = "data"
-
-
-def _dense_param_bytes(cfg: ModelConfig) -> int:
-    """Non-expert parameter bytes (bf16)."""
-    return cfg.active_param_count() * 2
-
-
-def use_fsdp(cfg: ModelConfig, model_axis: int = 16) -> bool:
-    """FSDP over data when plain TP leaves > ~9 GB/chip of weights."""
-    return _dense_param_bytes(cfg) / model_axis > 9e9
-
-
-def _axis(ok: bool, name: str) -> Optional[str]:
-    return name if ok else None
-
-
-def param_pspecs(cfg: ModelConfig, shapes, *, model_axis: int = 16,
-                 data_axis: int = 16):
-    """shapes: pytree of ShapeDtypeStruct from jax.eval_shape(init_params).
-    Returns a matching pytree of PartitionSpec."""
-    fsdp = use_fsdp(cfg, model_axis)
-    ep_ok = cfg.n_experts > 0 and cfg.n_experts % data_axis == 0
-
-    def div(n: int, axis: int = model_axis) -> bool:
-        return n % axis == 0
-
-    def leaf_rule(path, leaf) -> P:
-        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
-        name = None
-        for k in reversed(names):
-            if isinstance(k, str):
-                name = k
-                break
-        shp = leaf.shape
-        grouped = "groups" in names or "layers" in names
-        base = (None,) if grouped else ()
-        r = len(shp) - len(base)                 # rank without group axis
-
-        def spec(*dims):
-            return P(*(base + dims))
-
-        # ---- embeddings -------------------------------------------------
-        if name == "embed":
-            return P(_axis(div(shp[0]), MDL),
-                     _axis(fsdp and div(shp[1], data_axis), DATA))
-        if name == "unembed":
-            return P(_axis(fsdp and div(shp[0], data_axis), DATA),
-                     _axis(div(shp[1]), MDL))
-        # ---- MoE --------------------------------------------------------
-        if name == "router":
-            return spec(None, None)
-        if name in ("w_gate", "w_up") and r == 3:          # [E, d, f]
-            return spec(_axis(ep_ok, DATA), None, _axis(div(shp[-1]), MDL))
-        if name == "w_down" and r == 3:                    # [E, f, d]
-            return spec(_axis(ep_ok, DATA), _axis(div(shp[-2]), MDL), None)
-        # ---- dense FFN ----------------------------------------------------
-        if name in ("w_gate", "w_up", "w1"):               # [d, f]
-            return spec(_axis(fsdp and div(shp[-2], data_axis), DATA),
-                        _axis(div(shp[-1]), MDL))
-        if name in ("w_down", "w2"):                       # [f, d]
-            return spec(_axis(div(shp[-2]), MDL),
-                        _axis(fsdp and div(shp[-1], data_axis), DATA))
-        if name == "b1":
-            return spec(_axis(div(shp[-1]), MDL))
-        if name == "b2":
-            return spec(None)
-        # ---- attention ----------------------------------------------------
-        if name == "wq":
-            return spec(_axis(fsdp and div(shp[-2], data_axis), DATA),
-                        _axis(div(shp[-1]), MDL))
-        if name in ("wk", "wv"):
-            return spec(_axis(fsdp and div(shp[-2], data_axis), DATA),
-                        _axis(div(shp[-1]), MDL))
-        if name == "wo":
-            return spec(_axis(div(shp[-2]), MDL),
-                        _axis(fsdp and div(shp[-1], data_axis), DATA))
-        if name in ("bq", "bk", "bv"):
-            return spec(_axis(div(shp[-1]), MDL))
-        # ---- SSD ----------------------------------------------------------
-        if name in ("w_z", "w_x"):                         # [d, di]
-            return spec(None, _axis(div(shp[-1]), MDL))
-        if name in ("w_B", "w_C"):                         # replicate (small)
-            return spec(None, None)
-        if name == "w_dt":
-            return spec(None, _axis(div(shp[-1]), MDL))
-        if name in ("conv_x_w",):
-            return spec(None, _axis(div(shp[-1]), MDL))
-        if name in ("conv_x_b", "norm_w"):
-            return spec(_axis(div(shp[-1]), MDL))
-        if name in ("conv_B_w", "conv_C_w", "conv_B_b", "conv_C_b"):
-            return spec(*(None,) * r)
-        if name in ("a_log", "dt_bias", "d_skip"):
-            return spec(_axis(div(shp[-1]), MDL))
-        if name == "w_out":                                # [di|w, d]
-            return spec(_axis(div(shp[-2]), MDL), None)
-        # ---- RG-LRU --------------------------------------------------------
-        if name in ("w_in_rec", "w_in_gate"):
-            return spec(None, _axis(div(shp[-1]), MDL))
-        if name == "conv_w":
-            return spec(None, _axis(div(shp[-1]), MDL))
-        if name in ("conv_b", "lam"):
-            return spec(_axis(div(shp[-1]), MDL))
-        if name in ("w_a", "w_i"):                         # [nb, bw, bw]
-            return spec(_axis(div(shp[-3]), MDL), None, None)
-        if name in ("b_a", "b_i"):
-            return spec(_axis(div(shp[-2]), MDL), None)
-        # ---- norms / scalars ------------------------------------------------
-        return spec(*(None,) * r)
-
-    return jax.tree_util.tree_map_with_path(leaf_rule, shapes)
-
-
-def kv_shard_mode() -> str:
-    """§Perf knob for GQA caches whose n_kv_heads doesn't divide the model
-    axis (would otherwise REPLICATE the cache, 16x memory):
-
-    * "seq" (default): shard the cache's sequence dim — decode attention
-      becomes context-parallel; the combine is O(B·heads·hd);
-    * "hd": shard head_dim — 16x storage cut but XLA all-gathers the cache
-      (or all-reduces scores) per layer;
-    * "none": paper-faithful replicated baseline.
-    Set REPRO_SHARD_KV=seq|hd|none.
-    """
-    import os
-    v = os.environ.get("REPRO_SHARD_KV",
-                       os.environ.get("REPRO_SHARD_KV_HD", "seq"))
-    if v == "1":
-        return "hd"
-    if v == "0":
-        return "none"
-    return v
-
-
-def cache_pspecs(cfg: ModelConfig, shapes, *, rows_axes: Tuple[str, ...],
-                 model_axis: int = 16):
-    """Cache leaves: row (slot) dim shards over the batch axes; KV head /
-    state-head dims shard over model when divisible."""
-
-    def div(n):
-        return n % model_axis == 0
-
-    kv_mode = kv_shard_mode()
-    rspec = rows_axes if rows_axes else None
-
-    def leaf_rule(path, leaf):
-        names = [getattr(k, "key", None) for k in path]
-        name = None
-        for k in reversed(names):
-            if isinstance(k, str):
-                name = k
-                break
-        shp = leaf.shape
-        grouped = "groups" in names
-        base = (None,) if grouped else ()
-        r = len(shp) - len(base)
-
-        def spec(*dims):
-            return P(*(base + dims))
-
-        if name in ("k", "v", "ck", "cv"):  # [rows, S|W|F, nk, hd]
-            if div(shp[-2]):
-                return spec(rspec, None, MDL, None)
-            if kv_mode == "seq" and div(shp[-3]):
-                return spec(rspec, MDL, None, None)      # context parallel
-            if kv_mode in ("seq", "hd") and div(shp[-1]):
-                return spec(rspec, None, None, MDL)
-            return spec(rspec, None, None, None)
-        if name == "pos":                   # [rows, W]
-            return spec(rspec, None)
-        if name == "state":                 # [rows, nh, P, N]
-            return spec(rspec, _axis(div(shp[-3]), MDL), None, None)
-        if name == "conv_x":                # [rows, cw-1, di]
-            return spec(rspec, None, _axis(div(shp[-1]), MDL))
-        if name in ("conv_B", "conv_C"):
-            return spec(rspec, None, None)
-        if name in ("h",):                  # [rows, w]
-            return spec(rspec, _axis(div(shp[-1]), MDL))
-        if name == "conv":                  # lru conv [rows, cw-1, w]
-            return spec(rspec, None, _axis(div(shp[-1]), MDL))
-        return spec(*(None,) * r)
-
-    return jax.tree_util.tree_map_with_path(leaf_rule, shapes)
-
-
-def with_sharding(mesh, shapes, pspecs):
-    """Attach NamedShardings to a ShapeDtypeStruct tree (no allocation)."""
-    return jax.tree.map(
-        lambda s, p: jax.ShapeDtypeStruct(
-            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
-        shapes, pspecs)
-
+__all__ = [
+    "DATA", "MDL", "param_pspecs", "cache_pspecs", "use_fsdp",
+    "kv_shard_mode", "with_sharding", "mesh_axis", "batch_axis_size",
+    "INPUT_SHAPES", "shape_supported", "input_specs",
+]
 
 # --------------------------------------------------------------------------
 # the four assigned input shapes
@@ -241,12 +51,14 @@ def shape_supported(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
 def input_specs(cfg: ModelConfig, shape_name: str, mesh,
                 dtype=jnp.bfloat16) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
-    allocation) for every model input of the given workload shape."""
+    allocation) for every model input of the given workload shape.  Batch
+    sharding spans the mesh's batch axes (``pod`` x ``data``); axis sizes
+    come from the mesh itself, not a hard-coded grid."""
     info = INPUT_SHAPES[shape_name]
     S, B = info["seq_len"], info["global_batch"]
     multi_pod = "pod" in mesh.axis_names
     baxes = ("pod", "data") if multi_pod else ("data",)
-    data_axis_size = 16 * (2 if multi_pod else 1)
+    data_axis_size = batch_axis_size(mesh)
     rows_axes = baxes if B % data_axis_size == 0 else None
 
     def sds(shape, dt, spec):

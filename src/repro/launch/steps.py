@@ -140,8 +140,8 @@ def build_dryrun(cfg: ModelConfig, shape_name: str, mesh,
     # _SHARD=0 restores the replicated baseline)
     if cfg.n_experts and os.environ.get("REPRO_MOE_DISPATCH_SHARD",
                                         "1") == "1":
-        data_size = 16 * (2 if "pod" in mesh.axis_names else 1)
-        bk.set_moe_dispatch_spec(P("data"), shards=data_size)
+        bk.set_moe_dispatch_spec(P("data"),
+                                 shards=sh.batch_axis_size(mesh))
     else:
         bk.set_moe_dispatch_spec(None, shards=1)
     specs = sh.input_specs(cfg, shape_name, mesh, dtype)
@@ -150,7 +150,7 @@ def build_dryrun(cfg: ModelConfig, shape_name: str, mesh,
 
     pshapes = jax.eval_shape(
         functools.partial(stack.init_params, cfg, dtype=dtype), key)
-    pspecs = sh.param_pspecs(cfg, pshapes)
+    pspecs = sh.param_pspecs(cfg, pshapes, mesh=mesh)
     params = sh.with_sharding(mesh, pshapes, pspecs)
     meta = {"kind": kind, "optimizer": None}
 
@@ -177,7 +177,8 @@ def build_dryrun(cfg: ModelConfig, shape_name: str, mesh,
     S = specs["seq_len"]
     cshapes = jax.eval_shape(
         functools.partial(stack.init_cache, cfg, B, S, dtype=dtype))
-    cspecs = sh.cache_pspecs(cfg, cshapes, rows_axes=specs["rows_axes"])
+    cspecs = sh.cache_pspecs(cfg, cshapes, rows_axes=specs["rows_axes"],
+                             mesh=mesh)
     cache = sh.with_sharding(mesh, cshapes, cspecs)
 
     if kind == "prefill":

@@ -349,6 +349,17 @@ def set_cache_activation_spec(spec):
     _CACHE_ACT_SPEC = spec
 
 
+def _constrain_cache_act(x):
+    """Apply ``_CACHE_ACT_SPEC`` only when its rank matches ``x``: the
+    launch stack sets it for batched ``[B, S, d]`` serve steps, while the
+    TP engines' packed path carries rank-2 ``[T, d]`` activations through
+    the same group scan (GSPMD lays those out from the param shardings
+    alone) — a rank-mismatched constraint must be a no-op, not an error."""
+    if _CACHE_ACT_SPEC is None or len(_CACHE_ACT_SPEC) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, _CACHE_ACT_SPEC)
+
+
 def _scan_unroll() -> int | bool:
     """REPRO_SCAN_UNROLL=1 fully unrolls the layer scan — used by the
     roofline pass so compiled.cost_analysis() counts every layer (XLA does
@@ -366,8 +377,7 @@ def _run_layers(cfg, params, cache, x, apply_fn, remat: bool):
     if has_cache:
         def group_body(carry, xs):
             x, aux = carry
-            if _CACHE_ACT_SPEC is not None:
-                x = jax.lax.with_sharding_constraint(x, _CACHE_ACT_SPEC)
+            x = _constrain_cache_act(x)
             gp, gc = xs
             new_gc = []
             for j, kind in enumerate(group_kinds):
@@ -477,8 +487,7 @@ def forward_packed_stage(cfg: ModelConfig, params, pk: PackedBatch, cache,
     if "groups" in cache:
         def group_body(carry, xs):
             x, aux = carry
-            if _CACHE_ACT_SPEC is not None:
-                x = jax.lax.with_sharding_constraint(x, _CACHE_ACT_SPEC)
+            x = _constrain_cache_act(x)
             gp, gc = xs
             new_gc = []
             for j, kind in enumerate(group_kinds):

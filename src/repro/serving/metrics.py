@@ -89,6 +89,8 @@ class PipelineStats:
     is added here.
     """
     pp: int
+    tp: int = 1                # chips per stage (annotation only: TP time
+    #                            is inside the measured stage durations)
     stage_free: List[float] = field(default_factory=list)
     stage_busy: List[float] = field(default_factory=list)
     n_microbatches: int = 0
@@ -177,6 +179,7 @@ class ServingSummary:
     peak_pool_util: float = 0.0
     # pipeline-parallel stage occupancy (zero for single-stage runs)
     pp: int = 1
+    tp: int = 1
     bubble_fraction: float = 0.0
 
     @property
@@ -193,7 +196,10 @@ class ServingSummary:
 def summarize(traces: Iterable[RequestTrace],
               makespan: Optional[float] = None,
               peak_pool_util: float = 0.0,
-              pipeline: Optional[PipelineStats] = None) -> ServingSummary:
+              pipeline: Optional[PipelineStats] = None,
+              tp: Optional[int] = None) -> ServingSummary:
+    """``tp`` overrides the TP degree for single-stage (no PipelineStats)
+    runs; pipelined runs carry it on ``pipeline.tp``."""
     traces = list(traces)
     ttfts = [t.ttft for t in traces if t.ttft is not None]
     tbts = [g for t in traces for g in t.tbts]
@@ -212,6 +218,8 @@ def summarize(traces: Iterable[RequestTrace],
         recompute_tokens=sum(t.recompute_tokens for t in traces),
         peak_pool_util=peak_pool_util,
         pp=pipeline.pp if pipeline is not None else 1,
+        tp=(tp if tp is not None
+            else pipeline.tp if pipeline is not None else 1),
         bubble_fraction=(pipeline.bubble_fraction
                          if pipeline is not None else 0.0))
 
@@ -223,8 +231,9 @@ def format_table(s: ServingSummary, unit: str = "s") -> str:
             ("queue_delay", s.queue_delay), ("e2e", s.e2e)]
     out = [f"requests={s.n_requests} tokens={s.n_tokens} "
            f"makespan={s.makespan:.3f}s throughput={s.throughput:.1f} tok/s",]
-    if s.pp > 1:
-        out.append(f"pp={s.pp} bubble_fraction={s.bubble_fraction:.1%}")
+    if s.pp > 1 or s.tp > 1:
+        out.append(f"pp={s.pp} tp={s.tp} "
+                   f"bubble_fraction={s.bubble_fraction:.1%}")
     if s.n_preemptions or s.peak_pool_util:
         out.append(f"preemptions={s.n_preemptions} "
                    f"recompute_tokens={s.recompute_tokens} "

@@ -127,6 +127,7 @@ class OnlineResult:
     makespan: float = 0.0
     n_preemptions: int = 0
     pipeline: Optional[PipelineStats] = None   # set by the pipelined loop
+    tp: int = 1                                # engine TP degree
 
     @property
     def peak_pool_util(self) -> float:
@@ -143,7 +144,7 @@ class OnlineResult:
     def summary(self) -> ServingSummary:
         return summarize(self.traces.values(), makespan=self.makespan,
                          peak_pool_util=self.peak_pool_util,
-                         pipeline=self.pipeline)
+                         pipeline=self.pipeline, tp=self.tp)
 
 
 def serve_online(scheduler: Scheduler, executor,
@@ -160,7 +161,9 @@ def serve_online(scheduler: Scheduler, executor,
     pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
     traces = {r.req_id: RequestTrace(r.req_id, r.arrival_time)
               for r in requests}
-    result = OnlineResult(traces=traces, outputs={})
+    # single-stage TP runs carry the engine's degree into the summary
+    result = OnlineResult(traces=traces, outputs={}, tp=getattr(
+        getattr(executor, "engine", None), "tp", 1))
     clock = 0.0
     n_rejected = 0
     passes_now = getattr(scheduler, "supports_time", False)
@@ -247,11 +250,12 @@ def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
     """
     if warmup:
         engine.warmup()                     # compile stages off the clock
-    stats = PipelineStats(engine.pp)
+    stats = PipelineStats(engine.pp, tp=getattr(engine, "tp", 1))
     pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
     traces = {r.req_id: RequestTrace(r.req_id, r.arrival_time)
               for r in requests}
-    result = OnlineResult(traces=traces, outputs={}, pipeline=stats)
+    result = OnlineResult(traces=traces, outputs={}, pipeline=stats,
+                          tp=stats.tp)
     locked: Dict[int, float] = {}           # req_id -> drain (unlock) time
     n_rejected = 0
     passes_now = getattr(scheduler, "supports_time", False)
@@ -353,6 +357,9 @@ class OnlineServer:
     ``pp > 1`` serves on a :class:`PipelineEngine` through the pipelined
     event loop (:func:`serve_online_pipelined`): up to ``pp`` micro-batches
     in flight, per-stage bubble accounting on ``result.pipeline``.
+
+    ``tp > 1`` makes the engine tensor-parallel (per stage when composed
+    with ``pp``); the loops are unchanged — TP is invisible to scheduling.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -363,8 +370,8 @@ class OnlineServer:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  policy_kwargs: Optional[dict] = None, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 watermark: float = 0.0, pp: int = 1, devices=None,
-                 max_decodes: Optional[int] = None):
+                 watermark: float = 0.0, pp: int = 1, tp: int = 1,
+                 devices=None, max_decodes: Optional[int] = None):
         from repro.serving.server import build_engine_and_scheduler
         self.cfg = cfg
         self.policy_name = policy
@@ -374,7 +381,7 @@ class OnlineServer:
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, policy_kwargs=policy_kwargs, paged=paged,
             block_size=block_size, n_blocks=n_blocks, watermark=watermark,
-            pp=pp, devices=devices, max_decodes=max_decodes)
+            pp=pp, tp=tp, devices=devices, max_decodes=max_decodes)
         self.executor = EngineExecutor(self.engine)
 
     def run(self, requests: Sequence[Request], *, warmup: bool = True,

@@ -31,7 +31,7 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                paged: bool = False, block_size: int = 16,
                                n_blocks: Optional[int] = None,
                                watermark: float = 0.0, pp: int = 1,
-                               devices=None,
+                               tp: int = 1, devices=None,
                                max_decodes: Optional[int] = None):
     """Shared construction for the offline Server and OnlineServer.
 
@@ -49,6 +49,13 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     local ones) — which keeps the exact same execute contract and token
     outputs, and additionally measures per-stage service times for the
     pipelined serving loop's bubble accounting.
+
+    ``tp > 1`` makes the engine tensor-parallel over ``tp`` chips (per
+    stage, when composed with ``pp > 1`` — ``pp x tp`` devices total):
+    params and cache shard over the ``model`` mesh axis under the shared
+    :mod:`repro.sharding` policy.  Scheduling is untouched — slot budgets,
+    token budgets and block accounting are per-replica quantities that do
+    not change with intra-replica parallelism.
 
     ``max_decodes`` caps the decodes the SCHEDULER piggybacks per
     iteration (default: every decoding request, ``n_slots - 1``).  With a
@@ -68,9 +75,10 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                block_size=block_size, n_blocks=n_blocks,
                watermark=watermark)
     if pp > 1:
-        engine = PipelineEngine(cfg, params, pp=pp, devices=devices, **ekw)
+        engine = PipelineEngine(cfg, params, pp=pp, tp=tp, devices=devices,
+                                **ekw)
     else:
-        engine = Engine(cfg, params, **ekw)
+        engine = Engine(cfg, params, tp=tp, devices=devices, **ekw)
     kw = dict(n_slots=n_slots,
               max_decodes=(max_decodes if max_decodes is not None
                            else max(n_slots - 1, 1)),
@@ -124,7 +132,7 @@ class Server:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None, watermark: float = 0.0,
-                 pp: int = 1, devices=None):
+                 pp: int = 1, tp: int = 1, devices=None):
         self.cfg = cfg
         self.policy_name = policy
         self.engine, self.scheduler = build_engine_and_scheduler(
@@ -132,7 +140,8 @@ class Server:
             n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, paged=paged, block_size=block_size,
-            n_blocks=n_blocks, watermark=watermark, pp=pp, devices=devices)
+            n_blocks=n_blocks, watermark=watermark, pp=pp, tp=tp,
+            devices=devices)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 100_000) -> ServeResult:

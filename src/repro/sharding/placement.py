@@ -1,0 +1,87 @@
+"""NamedSharding placement of live params / caches for the serving engines.
+
+The launch stack (``repro.launch.steps``) consumes the policy as
+ShapeDtypeStruct specs for dry-run lowering; the engines consume it here as
+actual ``jax.device_put`` placements, so one leaf-rule module
+(:mod:`repro.sharding.policy`) governs both.  With sharded inputs the
+engines' jitted steps SPMD-partition automatically (GSPMD propagates from
+the argument shardings); no shard_map or per-op annotation is needed.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding import policy
+
+
+def make_tp_mesh(tp: int, devices: Optional[Sequence] = None) -> Mesh:
+    """``(1, tp)`` mesh with the policy's ``("data", "model")`` axis names:
+    the single-stage serving engine's TP domain.  The degenerate data axis
+    keeps every policy spec valid on this mesh."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < tp:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices, have {len(devs)}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+            f"before the first jax call")
+    arr = np.asarray(devs[:tp]).reshape(1, tp)
+    return Mesh(arr, (policy.DATA, policy.MDL))
+
+
+def stage_tp_meshes(pp: int, tp: int,
+                    devices: Optional[Sequence] = None) -> List[Mesh]:
+    """One ``(1, tp)`` submesh per pipeline stage — row ``s`` of
+    :func:`repro.launch.mesh.make_pipeline_mesh`'s ``(pp, tp)`` grid — so
+    each stage's jitted step SPMD-partitions over its own ``model`` axis
+    while stages stay independent executables."""
+    from repro.launch.mesh import make_pipeline_mesh
+    grid = make_pipeline_mesh(pp, tp, devices=devices)
+    return [Mesh(grid.devices[s].reshape(1, tp), (policy.DATA, policy.MDL))
+            for s in range(pp)]
+
+
+def shard_params(cfg: ModelConfig, params, mesh: Mesh):
+    """Commit a (full or stage-sliced) parameter tree to ``mesh`` under the
+    shared policy's PartitionSpecs."""
+    specs = policy.param_pspecs(cfg, params, mesh=mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        params, specs)
+
+
+def shard_cache(cfg: ModelConfig, cache, mesh: Mesh, *,
+                rows_axes: Optional[tuple] = None):
+    """Commit a (full or stage-sliced) cache tree — dense rows and paged
+    ``pk``/``pv`` pools alike — to ``mesh``.  Engine slots are not batch-
+    sharded (``rows_axes=None``): every device holds every slot's row, and
+    the model axis splits KV heads / pool blocks / head_dim per policy."""
+    specs = policy.cache_pspecs(cfg, cache, rows_axes=rows_axes, mesh=mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        cache, specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement on ``mesh`` (activations crossing a
+    pipeline-stage boundary, host-built packed batches)."""
+    return NamedSharding(mesh, P())
+
+
+def check_tp_supported(tp: int, paged: bool) -> None:
+    """TP engines run the packed attention through XLA; the paged Pallas
+    kernels (``REPRO_PAGED_ATTN_BACKEND=pallas``) are single-device
+    block-table programs that GSPMD cannot partition — reject the
+    combination up front instead of failing opaquely at trace time."""
+    if tp <= 1 or not paged:
+        return
+    from repro.models.blocks import _paged_attn_backend
+    if _paged_attn_backend() == "pallas":
+        raise NotImplementedError(
+            "tp > 1 with the paged pallas attention backend is not "
+            "supported: the block-table kernels are not SPMD-partitionable;"
+            " use REPRO_PAGED_ATTN_BACKEND=xla for tensor-parallel engines")

@@ -69,6 +69,18 @@ def _matmul_time(hw: Hardware, m: int, k: int, n: int,
     return max(t_compute, t_memory) + hw.kernel_overhead
 
 
+def tp_allreduce_time(hw: Hardware, n_bytes: float, tp: int) -> float:
+    """Ring all-reduce of an ``n_bytes`` activation over ``tp`` chips:
+    every chip sends/receives ``2 (tp-1)/tp`` of the buffer over its link
+    (reduce-scatter + all-gather), plus one launch overhead.  This is the
+    per-layer synchronisation Megatron TP pays after each row-parallel
+    matmul — it does NOT shrink with ``tp``, which is exactly why TP x PP
+    composition needs the term to predict bubble interaction."""
+    if tp <= 1 or n_bytes <= 0:
+        return 0.0
+    return 2.0 * (tp - 1) / tp * n_bytes / hw.link_bw + hw.kernel_overhead
+
+
 def _attention_time(hw: Hardware, n_q: int, n_kv: int, n_heads: int,
                     n_kv_heads: int, head_dim: int) -> float:
     """Score + AV for n_q query tokens against n_kv cached tokens."""
@@ -92,6 +104,7 @@ class CostBreakdown:
     postproj: float = 0.0
     ffn: float = 0.0
     others: float = 0.0
+    collective: float = 0.0      # TP all-reduce time (0 when n_chips == 1)
 
     @property
     def linear(self) -> float:
@@ -99,7 +112,7 @@ class CostBreakdown:
 
     @property
     def total(self) -> float:
-        return self.linear + self.attn + self.others
+        return self.linear + self.attn + self.others + self.collective
 
 
 def _linear_ops_time(cfg: ModelConfig, hw: Hardware, token_groups:
@@ -155,9 +168,14 @@ def iteration_time(cfg: ModelConfig, hw: Hardware, spec: BatchSpec,
                    ) -> CostBreakdown:
     """Model one engine iteration over the whole model (all layers).
 
-    ``n_chips`` divides weights/compute (ideal tensor parallelism — the
-    paper's simulation makes the same assumption, §5.3).  ``others_frac``
-    adds the paper's measured <5% for norms/residuals/activations.
+    ``n_chips`` divides weights/compute (tensor parallelism over the
+    ``model`` axis; the paper's simulation assumes the split is ideal,
+    §5.3) and ADDS the per-layer TP synchronisation: two ring all-reduces
+    of the token group's ``[m, d_model]`` activations per layer (after the
+    attention output projection and the FFN down projection), which do not
+    shrink with ``n_chips`` — see :func:`tp_allreduce_time` and the
+    ``collective`` field of the returned breakdown.  ``others_frac`` adds
+    the paper's measured <5% for norms/residuals/activations.
     """
     bd = CostBreakdown()
     if spec.fused:
@@ -188,6 +206,13 @@ def iteration_time(cfg: ModelConfig, hw: Hardware, spec: BatchSpec,
     bd.ffn = ffn_t * scale
     bd.attn = attn * scale
     bd.others = (bd.linear + bd.attn) * others_frac
+    if n_chips > 1:
+        coll = 0.0
+        for m in groups:
+            # two row-parallel matmul outputs per layer sync [m, d] each
+            coll += 2.0 * tp_allreduce_time(hw, m * cfg.d_model * BYTES,
+                                            n_chips)
+        bd.collective = coll * L
     return bd
 
 

@@ -37,21 +37,29 @@ def plan_to_spec(plan: IterationPlan, fused: bool = True) -> BatchSpec:
                      fused=fused)
 
 
-def plan_time(cfg: ModelConfig, hw: Hardware, plan: IterationPlan, *,
-              n_chips: int = 1, fused: bool = True) -> float:
-    """Cost a plan the way :meth:`Engine.execute` runs it: the first chunk
-    fused with all piggybacked decodes, remaining chunks as separate packed
-    sub-steps, each paying its own weight fetch.  Single-chunk plans reduce
-    to ``iteration_time(plan_to_spec(plan))``."""
+def _plan_specs(plan: IterationPlan, fused: bool):
+    """The packed sub-step BatchSpecs :meth:`Engine.execute` runs a plan
+    as: first chunk fused with all piggybacked decodes, remaining chunks
+    alone, each paying its own weight fetch."""
     decodes = _decode_seg(plan.decodes)
-    total = 0.0
     for i, c in enumerate(plan.chunks or [None]):
         spec = BatchSpec(
             prefills=(PrefillSeg(len(c.tokens), c.start),) if c else (),
             decodes=decodes if i == 0 else (), fused=fused)
         if spec.n_tokens:
-            total += iteration_time(cfg, hw, spec, n_chips=n_chips).total
-    return total
+            yield spec
+
+
+def plan_time(cfg: ModelConfig, hw: Hardware, plan: IterationPlan, *,
+              n_chips: int = 1, fused: bool = True) -> float:
+    """Cost a plan as consecutive packed sub-steps (:func:`_plan_specs`).
+    Single-chunk plans reduce to ``iteration_time(plan_to_spec(plan))``.
+    ``n_chips`` is the TP degree: compute splits, and the per-layer
+    all-reduce term of :func:`repro.sim.cost_model.tp_allreduce_time` is
+    charged (``simulate_pipeline`` reports that share separately as
+    ``collective_time``)."""
+    return sum(iteration_time(cfg, hw, s, n_chips=n_chips).total
+               for s in _plan_specs(plan, fused))
 
 
 @dataclass
@@ -62,6 +70,7 @@ class PipelineResult:
     request_bubble: Dict[int, float]      # req_id -> attributed bubble time
     request_finish: Dict[int, float]
     n_microbatches: int
+    collective_time: float = 0.0          # TP all-reduce stage-time (total)
 
     @property
     def total_bubble(self) -> float:
@@ -72,6 +81,14 @@ class PipelineResult:
         v = sorted(self.request_bubble.values())
         return v[len(v) // 2] if v else 0.0
 
+    @property
+    def collective_fraction(self) -> float:
+        """TP all-reduce share of busy stage-time (0 at tp=1) — how much
+        of the pipeline's occupied time is spent synchronising, the knob
+        that couples TP degree to bubble size."""
+        busy = sum(self.stage_busy)
+        return self.collective_time / busy if busy > 0 else 0.0
+
 
 def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
                       scheduler: Scheduler, *, pp: int, tp: int = 1,
@@ -80,11 +97,14 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
                       max_iters: int = 1_000_000) -> PipelineResult:
     """Run the scheduler's workload through a ``pp``-stage pipeline.
 
-    ``tp`` chips per stage split each stage's work (ideal TP).  Micro-batch
-    stage time = iteration_time over n_layers/pp layers.  A simple P2P
-    activation transfer cost is added between stages; the degenerate
-    ``pp=1`` case has no inter-stage links, pays no transfer, and
-    collapses exactly to the sequential single-stage cost model
+    ``tp`` chips per stage split each stage's compute and charge the
+    per-layer ring all-reduce term (``cost_model.tp_allreduce_time``;
+    reported as ``collective_time`` / ``collective_fraction`` on the
+    result — the measurable coupling between TP degree and bubble size).
+    Micro-batch stage time = iteration_time over n_layers/pp layers.  A
+    simple P2P activation transfer cost is added between stages; the
+    degenerate ``pp=1`` case has no inter-stage links, pays no transfer,
+    and collapses exactly to the sequential single-stage cost model
     (tests/test_sim.py pins this).
     """
     if pp < 1:
@@ -95,12 +115,18 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
     req_finish: Dict[int, float] = {}
     stage_busy = [0.0] * pp
     n_mb = 0
+    coll_total = 0.0
 
     if p2p_bytes_per_token is None:
         p2p_bytes_per_token = cfg.d_model * 2
 
-    def stage_time(plan: IterationPlan) -> float:
-        return plan_time(cfg, hw, plan, n_chips=tp, fused=fused) / pp
+    def plan_cost(plan: IterationPlan) -> Tuple[float, float]:
+        """-> (per-stage service time, full-plan collective time); one
+        cost-model evaluation per packed sub-step serves both."""
+        bds = [iteration_time(cfg, hw, s, n_chips=tp)
+               for s in _plan_specs(plan, fused)]
+        return (sum(b.total for b in bds) / pp,
+                sum(b.collective for b in bds))
 
     def p2p_time(plan: IterationPlan) -> float:
         toks = plan.n_prefill_tokens + len(plan.decodes)
@@ -143,7 +169,10 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
                 continue
             break
         n_mb += 1
-        dt = stage_time(plan)
+        # pp stages each spend collective/pp of their service time in TP
+        # all-reduces; summed over stages that is the plan's full term
+        dt, coll = plan_cost(plan)
+        coll_total += coll
         hop = p2p_time(plan) if pp > 1 else 0.0
         ids = [c.req_id for c in plan.chunks] + \
             [d.req_id for d in plan.decodes]
@@ -188,4 +217,5 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
     stage_idle = [makespan - b for b in stage_busy]
     return PipelineResult(makespan=makespan, stage_busy=stage_busy,
                           stage_idle=stage_idle, request_bubble=req_bubble,
-                          request_finish=req_finish, n_microbatches=n_mb)
+                          request_finish=req_finish, n_microbatches=n_mb,
+                          collective_time=coll_total)

@@ -67,6 +67,25 @@ def test_float_config_knobs_pin_identity():
     assert len(errs) == 1 and "identity" in errs[0]
 
 
+def _grid_row(mode, pp, tp, **kw):
+    return dict(mode=mode, policy="x", pp=pp, tp=tp,
+                measured_bubble_fraction=kw.pop("bub", 0.1),
+                throughput=kw.pop("throughput", 1.0), **kw)
+
+
+def test_identity_bench_pins_grid_not_metric():
+    """Wall-clock benches: the tp x pp grid is pinned, numbers are not."""
+    base = _payload("pipeline_bubbles", [_grid_row("chunked", 2, 2)])
+    # wildly different wall-clock numbers: fine
+    fresh = _payload("pipeline_bubbles",
+                     [_grid_row("chunked", 2, 2, bub=0.9, throughput=0.01)])
+    assert compare(base, fresh, 0.20) == []
+    # a drifted grid (tp column changed) is flagged
+    fresh = _payload("pipeline_bubbles", [_grid_row("chunked", 2, 1)])
+    errs = compare(base, fresh, 0.20)
+    assert len(errs) == 1 and "identity" in errs[0]
+
+
 def _write(dirpath, name, payload):
     (dirpath / name).write_text(json.dumps(payload))
 
@@ -78,22 +97,43 @@ def test_main_end_to_end(tmp_path):
     freshdir.mkdir()
     _write(basedir, "BENCH_latency.json",
            _payload("latency_sweep", [_row("sarathi_serve", 2, 100.0)]))
-    # wall-clock benches are never gated, even when present
-    _write(basedir, "BENCH_pipeline.json",
-           _payload("pipeline_bubbles", [_row("chunked", 0, 1.0)]))
+    _write(basedir, "BENCH_pipeline_tp.json",
+           _payload("pipeline_bubbles", [_grid_row("chunked", 2, 2)]))
     args = ["--baseline-dir", str(basedir), "--fresh-dir", str(freshdir)]
+    gated = args + ["--benches", "latency_sweep"]
+    grid = args + ["--benches", "pipeline_bubbles"]
 
-    assert main(args) == 1                       # fresh artifact missing
+    assert main(args) == 1                       # fresh artifacts missing
     _write(freshdir, "BENCH_latency.json",
            _payload("latency_sweep", [_row("sarathi_serve", 2, 95.0)]))
-    assert main(args) == 0                       # within tolerance
+    assert main(gated) == 0                      # within tolerance
+    assert main(args) == 1                       # pipeline fresh missing
+    _write(freshdir, "BENCH_pipeline_tp.json",
+           _payload("pipeline_bubbles",
+                    [_grid_row("chunked", 2, 2, bub=0.7)]))
+    assert main(args) == 0                       # grid matches, no gate
     _write(freshdir, "BENCH_latency.json",
            _payload("latency_sweep", [_row("sarathi_serve", 2, 10.0)]))
-    assert main(args) == 1                       # regression
-    assert main(args + ["--tol", "0.95"]) == 0   # looser tolerance
+    assert main(gated) == 1                      # regression
+    assert main(gated + ["--tol", "0.95"]) == 0  # looser tolerance
+
+    # a drifted grid fails the identity-pinned bench only
+    _write(freshdir, "BENCH_pipeline_tp.json",
+           _payload("pipeline_bubbles", [_grid_row("chunked", 4, 1)]))
+    assert main(grid) == 1
+    # --benches restricts --update too: rebase only the grid baseline
+    assert main(grid + ["--update"]) == 0
+    rebased = json.loads((basedir / "BENCH_pipeline_tp.json").read_text())
+    assert rebased["rows"][0]["pp"] == 4
+    assert json.loads((basedir / "BENCH_latency.json").read_text()
+                      )["rows"][0]["throughput"] == 100.0
+    assert main(grid) == 0
 
     # --update rebases the gated baseline from the fresh artifact
     assert main(args + ["--update"]) == 0
     rebased = json.loads((basedir / "BENCH_latency.json").read_text())
     assert rebased["rows"][0]["throughput"] == 10.0
     assert main(args) == 0
+
+    # unknown bench names are rejected up front
+    assert main(args + ["--benches", "nope"]) == 1

@@ -72,6 +72,39 @@ def test_shape_support_matrix():
             assert ok
 
 
+def test_paged_pool_leaves_shard_on_production_mesh():
+    """pk/pv pool leaves [n_blocks, bs, nk, hd] must carry model-axis
+    specs (kv heads divide 16 for tinyllama's full config) — the paged
+    cache must not silently replicate under TP."""
+    import functools
+    cfg = get_config("tinyllama-1.1b")
+    cshapes = jax.eval_shape(
+        functools.partial(stack.init_cache, cfg, 4, 128,
+                          dtype=jnp.bfloat16, paged_blocks=33,
+                          block_size=16))
+    specs = sh.cache_pspecs(cfg, cshapes, rows_axes=None)
+    pool = specs["groups"][0]["attn"]
+    # tinyllama GQA: nk=4 doesn't divide 16, nor do the 33 blocks; the
+    # default "seq" mode falls back to head_dim (64 % 16 == 0)
+    assert pool["pk"] == P(None, None, None, None, "model")
+    assert pool["pv"] == P(None, None, None, None, "model")
+    # at tp=2 the kv-head dim itself shards (4 % 2 == 0)
+    m2 = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
+    pool2 = sh.cache_pspecs(cfg, cshapes, rows_axes=None,
+                            mesh=m2)["groups"][0]["attn"]
+    assert pool2["pk"] == P(None, None, None, "model", None)
+
+
+def test_policy_is_shared_with_serving_layer():
+    """The launch import path must BE the serving policy module — no
+    duplicated leaf rules anywhere."""
+    from repro.sharding import policy
+    assert sh.param_pspecs is policy.param_pspecs
+    assert sh.cache_pspecs is policy.cache_pspecs
+    assert sh.use_fsdp is policy.use_fsdp
+    assert sh.with_sharding is policy.with_sharding
+
+
 def test_input_shapes_exact():
     assert sh.INPUT_SHAPES["train_4k"] == dict(seq_len=4096,
                                                global_batch=256,

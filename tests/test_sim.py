@@ -155,3 +155,62 @@ def test_pipeline_pp1_collapses_to_single_stage_cost():
 def test_pipeline_rejects_bad_pp():
     with pytest.raises(ValueError):
         simulate_pipeline(gpt3_175b(), A100, _pp1_sched(), pp=0)
+
+
+# ----------------------------------------------------- TP collective term
+def test_tp_allreduce_term_shape():
+    """Ring all-reduce: zero at tp=1, grows with buffer size, approaches
+    the 2x buffer-over-link asymptote from below as tp grows."""
+    from repro.sim import tp_allreduce_time
+    assert tp_allreduce_time(A100, 1 << 20, 1) == 0.0
+    assert tp_allreduce_time(A100, 0, 8) == 0.0
+    t2 = tp_allreduce_time(A100, 1 << 20, 2)
+    t8 = tp_allreduce_time(A100, 1 << 20, 8)
+    assert 0.0 < t2 < t8
+    asymptote = 2.0 * (1 << 20) / A100.link_bw + A100.kernel_overhead
+    assert t8 < asymptote
+    assert tp_allreduce_time(A100, 1 << 22, 8) > t8
+
+
+def test_iteration_time_charges_tp_collectives():
+    """n_chips>1 divides compute but ADDS the per-layer all-reduce term:
+    the collective share must appear in the breakdown (and in .total),
+    scale with the token count, and stay zero at n_chips=1."""
+    cfg = llama_13b()
+    spec = BatchSpec(prefills=(PrefillSeg(256),),
+                     decodes=(DecodeSeg(8, 1024),))
+    bd1 = iteration_time(cfg, A100, spec, n_chips=1)
+    bd8 = iteration_time(cfg, A100, spec, n_chips=8)
+    assert bd1.collective == 0.0
+    assert bd8.collective > 0.0
+    assert bd8.total == pytest.approx(
+        bd8.linear + bd8.attn + bd8.others + bd8.collective)
+    # 2 all-reduces x n_layers of the [m, d] activations
+    from repro.sim import tp_allreduce_time
+    m = spec.n_tokens
+    expected = 2.0 * cfg.n_layers * tp_allreduce_time(
+        A100, m * cfg.d_model * 2, 8)
+    assert bd8.collective == pytest.approx(expected)
+    big = BatchSpec(prefills=(PrefillSeg(1024),),
+                    decodes=(DecodeSeg(8, 1024),))
+    assert iteration_time(cfg, A100, big, n_chips=8).collective > \
+        bd8.collective
+    # unfused groups sync separately: at least as much collective time
+    assert iteration_time(
+        cfg, A100, BatchSpec(spec.prefills, spec.decodes, fused=False),
+        n_chips=8).collective >= bd8.collective
+
+
+def test_simulated_pipeline_reports_collective_fraction():
+    """simulate_pipeline(tp>1) accounts the all-reduce share of busy
+    stage-time; it is 0 at tp=1 and bounded by 1."""
+    cfg = gpt3_175b()
+    r1 = simulate_pipeline(cfg, A100, _pp1_sched(), pp=2, tp=1)
+    r8 = simulate_pipeline(cfg, A100, _pp1_sched(), pp=2, tp=8)
+    assert r1.collective_time == 0.0 and r1.collective_fraction == 0.0
+    assert r8.collective_time > 0.0
+    assert 0.0 < r8.collective_fraction < 1.0
+    # collectives don't shrink with tp while compute does, so the makespan
+    # speedup from tp=8 is sublinear
+    assert r8.makespan > r1.makespan / 8.0
+    assert r8.makespan < r1.makespan
