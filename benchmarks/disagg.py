@@ -1,0 +1,201 @@
+"""SARATHI piggybacking vs DistServe disaggregation vs hybrid, one harness.
+
+Three serving modes over the SAME bimodal chat+doc workload (the mixed
+prefill/decode phase both papers argue about):
+
+* ``chunked``  — the SARATHI/monolithic baseline: ONE engine, decode-
+  maximal batches from the ``sarathi_serve`` token-budget scheduler
+  (decodes piggyback on chunked prefills; no KV ever moves);
+* ``disagg``   — DistServe-style phase disaggregation: ``--n-prefill``
+  replicas run WHOLE-prompt prefills, ``--n-decode`` replicas run pure
+  decode batches, and every request's KV is handed off between them
+  (extracted, transferred, installed) when its prefill completes;
+* ``hybrid``   — chunked prefill replicas (SARATHI chunking on the
+  prefill side) feeding the same decode replicas — piggybacking's
+  uniform compute AND disaggregation's phase isolation.
+
+Every mode reports TWO columns:
+
+* measured — the real engines (reduced model on CPU; replica iterations
+  timed on the wall clock, replayed on per-replica virtual clocks);
+* predicted — the SAME schedulers + event loop with the §5.3 analytical
+  cost model at paper scale: the full ``--arch`` model on ``--hw``
+  (A100 by default), where the phase asymmetry the comparison is about
+  actually exists.  The KV handoff is charged in BOTH columns with the
+  cost model's per-token transfer term
+  (``repro.sim.cost_model.kv_transfer_time`` over
+  ``kv_handoff_bytes``) — reported per row as ``kv_transfer_s``.
+
+Greedy token outputs of the disaggregated modes are bit-identical to the
+monolithic engine (the handoff is a pure cache relocation; pinned by
+tests/test_disagg.py), so the three rows differ ONLY in scheduling and
+transfer cost — exactly the comparison DistServe vs Sarathi-Serve is
+about.
+
+    PYTHONPATH=src python -m benchmarks.disagg
+    PYTHONPATH=src python -m benchmarks.disagg --n-prefill 2 --n-decode 1
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python -m benchmarks.disagg --tp 2
+
+(The script sets XLA_FLAGS itself when unset; jax-touching imports are
+deferred until after argument parsing.)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from benchmarks.latency import write_bench_json
+from benchmarks.pipeline import bimodal_workload
+
+ROW_FIELDS = ("mode", "n_prefill", "n_decode", "tp", "throughput",
+              "p50_ttft", "p99_ttft", "p50_tbt", "p99_tbt", "n_handoffs",
+              "kv_transfer_s", "predicted_throughput", "predicted_p99_tbt",
+              "predicted_kv_transfer_s")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--hw", default="a100-80gb",
+                    help="hardware profile for the paper-scale sim column "
+                         "and the KV-transfer term")
+    ap.add_argument("--n-prefill", type=int, default=1,
+                    help="prefill replicas in the disagg/hybrid modes")
+    ap.add_argument("--n-decode", type=int, default=1,
+                    help="decode replicas in the disagg/hybrid modes")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel chips per replica (both phases; "
+                         "(n_prefill+n_decode)*tp forced host devices)")
+    ap.add_argument("--n", type=int, default=12, help="requests")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=8, help="per replica")
+    ap.add_argument("--d-model", type=int, default=128,
+                    help="width of the reduced measured model")
+    ap.add_argument("--doc-min", type=int, default=192)
+    ap.add_argument("--doc-max", type=int, default=256)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the measured engines on paged KV pools "
+                         "(handoff moves block contents, tables remap)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_disagg.json",
+                    help="machine-readable artifact path ('' disables)")
+    args = ap.parse_args(argv)
+
+    # must land before the first jax call locks the device count
+    n_dev = max((args.n_prefill + args.n_decode) * args.tp, 1)
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
+
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import OnlineServer, ReplicaSet
+    from repro.sim.hardware import PROFILES
+
+    if args.n_prefill < 1 or args.n_decode < 1:
+        ap.error("--n-prefill and --n-decode must be >= 1")
+    if args.hw.lower() not in PROFILES:
+        ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
+    hw = PROFILES[args.hw.lower()]
+    full_cfg = get_config(args.arch)
+    base = full_cfg.reduced()
+    heads = max(base.n_heads // 2, 1)
+    cfg = dataclasses.replace(
+        base, n_layers=2, d_model=args.d_model, n_heads=heads,
+        n_kv_heads=min(base.n_kv_heads, heads),
+        head_dim=args.d_model // heads, d_ff=2 * args.d_model,
+        vocab_size=min(base.vocab_size, 512))
+    params = build_model(cfg).init_params(jax.random.PRNGKey(args.seed))
+
+    def workload(vocab):
+        return bimodal_workload(args.n, vocab_size=vocab, seed=args.seed,
+                                doc_len=(args.doc_min, args.doc_max))
+
+    max_ctx = max(len(r.prompt) + r.max_new_tokens
+                  for r in workload(cfg.vocab_size))
+    max_len = -(-(max_ctx + 1) // 64) * 64          # block-size aligned
+    shared = dict(chunk_size=args.chunk, n_slots=args.slots,
+                  max_len=max_len, max_prompt_len=args.doc_max,
+                  paged=args.paged, seed=args.seed)
+
+    def measured(mode):
+        if mode == "chunked":
+            srv = OnlineServer(cfg, params, policy="sarathi_serve",
+                               tp=args.tp, **shared)
+            res = srv.run(workload(cfg.vocab_size))
+            return res.summary(), 0, 0.0, res.outputs
+        rs = ReplicaSet(cfg, params, n_prefill=args.n_prefill,
+                        n_decode=args.n_decode,
+                        prefill_chunked=(mode == "hybrid"),
+                        prefill_tp=args.tp, decode_tp=args.tp, hw=hw,
+                        **shared)
+        res = rs.run(workload(cfg.vocab_size))
+        return (res.summary(), res.n_handoffs, res.kv_transfer_time,
+                res.outputs)
+
+    def predicted(mode):
+        from repro.serving import CostModelExecutor, serve_online
+        from repro.scheduler import POLICIES
+        if mode == "chunked":
+            sched = POLICIES["sarathi_serve"](
+                n_slots=args.slots, max_decodes=max(args.slots - 1, 1),
+                chunk_size=args.chunk)
+            res = serve_online(sched, CostModelExecutor(
+                full_cfg, hw, n_chips=args.tp),
+                workload(full_cfg.vocab_size))
+            return res.summary(), 0.0
+        rs = ReplicaSet.simulated(
+            full_cfg, hw, n_prefill=args.n_prefill, n_decode=args.n_decode,
+            prefill_chunked=(mode == "hybrid"), chunk_size=args.chunk,
+            n_slots=args.slots, max_prompt_len=args.doc_max,
+            prefill_tp=args.tp, decode_tp=args.tp)
+        res = rs.run(workload(full_cfg.vocab_size))
+        return res.summary(), res.kv_transfer_time
+
+    print(",".join(ROW_FIELDS))
+    rows = []
+    outputs = {}
+    for mode in ("chunked", "disagg", "hybrid"):
+        s, n_handoffs, kv_t, outs = measured(mode)
+        ps, pkv_t = predicted(mode)
+        np_, nd = (0, 0) if mode == "chunked" else (args.n_prefill,
+                                                    args.n_decode)
+        row = dict(mode=mode, n_prefill=np_, n_decode=nd, tp=args.tp,
+                   throughput=s.throughput, p50_ttft=s.ttft.p50,
+                   p99_ttft=s.ttft.p99, p50_tbt=s.tbt.p50,
+                   p99_tbt=s.tbt.p99, n_handoffs=n_handoffs,
+                   kv_transfer_s=kv_t,
+                   predicted_throughput=ps.throughput,
+                   predicted_p99_tbt=ps.tbt.p99,
+                   predicted_kv_transfer_s=pkv_t)
+        rows.append(row)
+        # req ids are drawn from a global counter, so each run's ids are
+        # fresh — compare token streams positionally (same sorted order)
+        outputs[mode] = [toks for _, toks in sorted(outs.items())]
+        print(",".join(f"{row[f]:.6g}" if isinstance(row[f], float)
+                       else str(row[f]) for f in ROW_FIELDS))
+
+    # greedy bit-identity across modes (tp=1; tp>1 engines hold the
+    # documented tolerance tier instead): the KV handoff must be a pure
+    # cache relocation, so disaggregated token streams == monolithic
+    same = all(outputs[m] == outputs["chunked"]
+               for m in ("disagg", "hybrid"))
+    print(f"# disagg/hybrid greedy outputs "
+          f"{'bit-identical to' if same else 'DIVERGED from'} the "
+          f"monolithic chunked engine", file=sys.stderr)
+    if not same and args.tp == 1:
+        sys.exit(1)
+
+    if args.json:
+        write_bench_json(args.json, name="disagg_modes",
+                         params=vars(args), rows=rows)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

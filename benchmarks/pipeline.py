@@ -41,6 +41,11 @@ couples TP degree to bubble size.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python -m benchmarks.pipeline --pp 2 --tp 2
 
+``--pp 1`` is accepted as the no-pipeline baseline column: the workload
+runs through the degenerate one-stage pipeline engine (bit-identical to
+the plain engine; the sim's pp=1 likewise charges no inter-stage
+transfer), so bubble numbers have an in-tool reference point.
+
 (The script sets XLA_FLAGS itself when unset — it must be exported before
 the first jax import, which is why all jax-touching imports are deferred.)
 """
@@ -120,10 +125,8 @@ def main(argv=None) -> None:
     from repro.sim.hardware import PROFILES
     from repro.sim.pipeline import simulate_pipeline
 
-    if args.pp < 2:
-        ap.error("--pp must be >= 2: this benchmark measures pipeline "
-                 "bubbles, which need stages to bubble between (single-"
-                 "stage TP latency is benchmarks/latency.py territory)")
+    if args.pp < 1:
+        ap.error("--pp must be >= 1")
     if args.hw.lower() not in PROFILES:
         ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
     hw = PROFILES[args.hw.lower()]
@@ -143,7 +146,10 @@ def main(argv=None) -> None:
                                 seed=args.seed,
                                 doc_len=(args.doc_min, args.doc_max))
 
-    max_ctx = max(len(r.prompt) + r.max_new_tokens for r in workload())
+    # the unchunked engine compiles C = doc_max, so the cache rows must
+    # cover it even when a small --n draws only shorter documents
+    max_ctx = max([len(r.prompt) + r.max_new_tokens for r in workload()]
+                  + [args.doc_max])
     max_len = -(-(max_ctx + 1) // 64) * 64          # block-size aligned
     # spread the decoding population over the pp in-flight micro-batches:
     # pp concurrent micro-batches x (cap decodes + 1 chunk request) fill
@@ -162,12 +168,17 @@ def main(argv=None) -> None:
         # cap is per-micro-batch, not per-engine, so backoff is off
         pkw = ({"admit_backoff": False, "max_chunks_per_iter": 1}
                if policy == "sarathi_serve" else None)
+        # --pp 1 still serves through the (degenerate, bit-identical)
+        # one-stage pipeline engine so the measured column exists: it is
+        # the in-tool no-pipeline reference point for the bubble numbers
+        # (sim's pp=1 likewise charges no inter-stage transfer)
         srv = OnlineServer(cfg, params, policy=policy,
                            chunk_size=args.chunk, n_slots=args.slots,
                            max_len=max_len, max_prompt_len=args.doc_max,
                            pp=args.pp, tp=args.tp, paged=args.paged,
                            seed=args.seed, max_decodes=max_decodes,
-                           policy_kwargs=pkw)
+                           policy_kwargs=pkw,
+                           force_pipeline=(args.pp == 1))
         res = srv.run(workload())
         s = res.summary()
         # discrete-event prediction: same schedule at PAPER scale, same TP
@@ -193,12 +204,18 @@ def main(argv=None) -> None:
         rows.append(row)
         print(",".join(f"{row[f]:.6g}" if isinstance(row[f], float)
                        else str(row[f]) for f in ROW_FIELDS))
-    verdict = measured["chunked"] < measured["unchunked"]
-    print(f"# chunked bubble {measured['chunked']:.1%} "
-          f"{'<' if verdict else '>='} unchunked "
-          f"{measured['unchunked']:.1%} — "
-          f"{'matches' if verdict else 'CONTRADICTS'} the §5.3 prediction",
-          file=sys.stderr)
+    if args.pp == 1:
+        print(f"# pp=1 no-pipeline baseline: chunked bubble "
+              f"{measured['chunked']:.1%}, unchunked "
+              f"{measured['unchunked']:.1%} (no stages to bubble between; "
+              f"§5.3 verdict applies at --pp >= 2)", file=sys.stderr)
+    else:
+        verdict = measured["chunked"] < measured["unchunked"]
+        print(f"# chunked bubble {measured['chunked']:.1%} "
+              f"{'<' if verdict else '>='} unchunked "
+              f"{measured['unchunked']:.1%} — "
+              f"{'matches' if verdict else 'CONTRADICTS'} the §5.3 "
+              f"prediction", file=sys.stderr)
     if args.json:
         write_bench_json(args.json, name="pipeline_bubbles",
                          params=vars(args), rows=rows)

@@ -3,7 +3,8 @@ from repro.core.chunking import (Chunk, kv_reload_bytes_factor, num_chunks,
                                  piggyback_coverage, plan_chunks)
 from repro.core.chunk_size import (MXU_TILE, optimal_pd_ratio,
                                    quantized_chunk_size, select_chunk_size)
-from repro.core.engine import ChunkWork, DecodeWork, Engine, IterationPlan
+from repro.core.engine import (ChunkWork, DecodeWork, Engine, IterationPlan,
+                               KVHandoff)
 from repro.core.pipeline_engine import PipelineEngine
 from repro.core.sampling import SamplingParams, sample
 from repro.models.packed import PackedBatch, make_packed
@@ -12,7 +13,7 @@ __all__ = [
     "Chunk", "plan_chunks", "num_chunks", "kv_reload_bytes_factor",
     "piggyback_coverage", "MXU_TILE", "quantized_chunk_size",
     "optimal_pd_ratio", "select_chunk_size", "Engine", "PipelineEngine",
-    "IterationPlan",
+    "IterationPlan", "KVHandoff",
     "ChunkWork", "DecodeWork", "SamplingParams", "sample", "PackedBatch",
     "make_packed",
 ]

@@ -60,6 +60,67 @@ from repro.models.registry import Model
 _POOL_KEYS = frozenset({"pk", "pv"})
 
 
+def _leaf_kind(path):
+    """-> (lead, is_pool) for a cache-tree leaf path: ``lead`` is 1 when
+    the leaf carries the scanned-group leading axis, and pool leaves are
+    the block-indexed paged KV (``pk``/``pv``)."""
+    keys = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    lead = 1 if "groups" in keys else 0
+    return lead, bool(keys and keys[-1] in _POOL_KEYS)
+
+
+def _extract_state(cache, slot, table):
+    """Pull one request's cache state out of ``cache``: slot-indexed
+    leaves yield their row ``slot``; pool leaves yield the request's
+    block contents gathered through ``table`` (never the reserved scratch
+    block — the table only ever lists allocated blocks).  The result has
+    the cache's own tree structure with the slot (or block) axis replaced
+    by the request's payload, so it round-trips through
+    :func:`_install_state` on any engine with the same layout."""
+    tbl = jnp.asarray(table, jnp.int32)
+
+    def pick(path, leaf):
+        lead, is_pool = _leaf_kind(path)
+        if is_pool:
+            return jnp.take(leaf, tbl, axis=lead)
+        return leaf[(slice(None),) * lead + (slot,)]
+
+    return jax.tree_util.tree_map_with_path(pick, cache)
+
+
+def _install_state(cache, state, slot, table):
+    """Inverse of :func:`_extract_state`: write the payload's rows into
+    row ``slot`` of every slot-indexed leaf and scatter the pool payload
+    into the destination blocks listed by ``table`` (the receiving
+    engine's own allocation — block tables are REMAPPED, not copied)."""
+    tbl = jnp.asarray(table, jnp.int32)
+
+    def put(path, leaf, row):
+        lead, is_pool = _leaf_kind(path)
+        leaf = jnp.asarray(leaf)             # host-built trees lack .at
+        row = jnp.asarray(row, leaf.dtype)
+        if is_pool:
+            return leaf.at[(slice(None),) * lead + (tbl,)].set(row)
+        return leaf.at[(slice(None),) * lead + (slot,)].set(row)
+
+    return jax.tree_util.tree_map_with_path(put, cache, state)
+
+
+@dataclass
+class KVHandoff:
+    """One request's extracted cache state, in transit between engines
+    (DistServe-style prefill->decode disaggregation, README §Disaggregated
+    serving).  ``state`` is a host-side pytree in the MONOLITHIC cache
+    structure — pipeline engines reassemble their stage slices into this
+    canonical form on extract and re-slice on install, so the handoff
+    composes across replicas of unequal ``pp``/``tp``.  The transfer is a
+    pure cache relocation: under greedy sampling the receiving engine's
+    token stream is bit-identical to never having moved."""
+    state: object                # pytree: slot rows + gathered pool blocks
+    n_blocks: int                # pool blocks in the payload (0 = dense)
+    block_size: int              # source pool geometry (0 = dense)
+
+
 def _reset_slot(cache, slot):
     """Zero every slot-indexed cache leaf's row ``slot`` (-1 for integer
     leaves, which are ring-buffer position markers where -1 == empty).
@@ -72,11 +133,9 @@ def _reset_slot(cache, slot):
     deliberately skipped) without this function having to know about them.
     """
     def wipe(path, leaf):
-        keys = [p.key for p in path
-                if isinstance(p, jax.tree_util.DictKey)]
-        if keys and keys[-1] in _POOL_KEYS:
+        lead, is_pool = _leaf_kind(path)
+        if is_pool:
             return leaf
-        lead = 1 if "groups" in keys else 0
         fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
         row = jnp.full(leaf.shape[:lead] + leaf.shape[lead + 1:], fill,
                        leaf.dtype)
@@ -250,6 +309,66 @@ class Engine:
 
     def slot(self, req_id: int) -> int:
         return self._slot_of[req_id]
+
+    # ---------------------------------------------------------- KV handoff
+    def extract_request(self, req_id: int) -> KVHandoff:
+        """Extract ``req_id``'s cache state for relocation to another
+        engine (phase-disaggregated serving, ``repro.serving.disagg``):
+        every slot-indexed leaf's row plus — when paged — the request's
+        pool-block contents gathered through its block table.  The
+        reserved scratch block is never part of a table, so it is never
+        transferred.  The payload is pulled to the host (``device_get``):
+        that IS the replica-to-replica transfer, charged by the cost
+        model's :func:`repro.sim.cost_model.kv_transfer_time` term.
+
+        The request stays resident; callers release it afterwards."""
+        slot = self._slot_of[req_id]
+        table = (self.block_manager.table(req_id) if self.paged else [])
+        state = jax.device_get(_extract_state(self.cache, slot, table))
+        return KVHandoff(
+            state=state, n_blocks=len(table),
+            block_size=self.block_manager.block_size if self.paged else 0)
+
+    def _prepare_install(self, req_id: int, handoff: KVHandoff
+                         ) -> List[int]:
+        """Shared install preconditions (single- and pipeline-engine):
+        validate the payload against this engine's cache layout and
+        allocate the FRESH destination block table; returns the table
+        (empty for dense)."""
+        if (handoff.n_blocks > 0) != self.paged:
+            raise ValueError(
+                "KV handoff requires matching cache layouts "
+                f"(payload {'paged' if handoff.n_blocks else 'dense'}, "
+                f"engine {'paged' if self.paged else 'dense'})")
+        if not self.paged:
+            return []
+        bm = self.block_manager
+        if handoff.block_size != bm.block_size:
+            raise ValueError(
+                f"KV handoff block_size mismatch: payload "
+                f"{handoff.block_size}, engine {bm.block_size}")
+        table = bm.ensure(req_id, handoff.n_blocks * bm.block_size)
+        if len(table) != handoff.n_blocks:       # pre-existing allocation
+            raise ValueError(
+                f"req {req_id} already holds {len(table)} blocks on "
+                f"the receiving engine; install needs a fresh slot")
+        return table
+
+    def install_request(self, req_id: int, handoff: KVHandoff):
+        """Install an extracted payload into ``req_id``'s (already
+        assigned) slot: rows land in the slot, pool blocks land in a
+        FRESH block-table allocation from this engine's own pool — block
+        ids are remapped, only contents move.  A pure relocation: greedy
+        token outputs afterwards are bit-identical to never having left
+        the source engine."""
+        table = self._prepare_install(req_id, handoff)
+        slot = self._slot_of[req_id]
+        self.cache = _install_state(self.cache, handoff.state, slot, table)
+        if self.tp_mesh is not None:
+            # re-pin the policy shardings: the eager scatter above may
+            # leave leaves with propagated (not canonical) placements
+            from repro import sharding as shd
+            self.cache = shd.shard_cache(self.cfg, self.cache, self.tp_mesh)
 
     # --------------------------------------------------------------- step
     def _step_impl(self, params, pk: PackedBatch, cache, key):

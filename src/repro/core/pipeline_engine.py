@@ -36,10 +36,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.cache import BlockManager
 from repro.configs.base import ModelConfig
-from repro.core.engine import ChunkWork, DecodeWork, Engine, IterationPlan
+from repro.core.engine import (ChunkWork, DecodeWork, Engine, IterationPlan,
+                               KVHandoff, _extract_state, _install_state)
 from repro.core.sampling import SamplingParams, sample
 
 
@@ -151,6 +153,48 @@ class PipelineEngine(Engine):
     def _seed_memory(self, memory, slot: int):   # pragma: no cover - guarded
         raise NotImplementedError("PipelineEngine does not support "
                                   "frontend-memory architectures yet")
+
+    def extract_request(self, req_id: int) -> KVHandoff:
+        """Per-stage extraction reassembled into the MONOLITHIC cache
+        structure: the stage partition slices the scanned ``groups`` axis
+        contiguously (``repro.launch.pipeline.stage_bounds``) and parks
+        the tail on the last stage, so concatenating the per-stage
+        payloads along the group axis in stage order IS the single-engine
+        payload — handoff composes across replicas of unequal ``pp``."""
+        slot = self._slot_of[req_id]
+        table = (self.block_manager.table(req_id) if self.paged else [])
+        parts = [jax.device_get(_extract_state(c, slot, table))
+                 for c in self.stage_caches]
+        state = {"groups": jax.tree.map(
+            lambda *xs: np.concatenate(xs, axis=0),
+            *[p["groups"] for p in parts])}
+        if "tail" in parts[-1]:
+            state["tail"] = parts[-1]["tail"]
+        return KVHandoff(
+            state=state, n_blocks=len(table),
+            block_size=self.block_manager.block_size if self.paged else 0)
+
+    def install_request(self, req_id: int, handoff: KVHandoff):
+        """Split the canonical payload back onto this engine's stage
+        boundaries and install each slice into its stage cache (one
+        engine-wide block table covers every stage's pool, exactly like
+        the resident paged path)."""
+        from repro.launch import pipeline as pl
+        from repro.models import stack
+        table = self._prepare_install(req_id, handoff)
+        slot = self._slot_of[req_id]
+        _, n_groups, _ = stack.group_split(self.cfg)
+        for s, (g0, g1) in enumerate(pl.stage_bounds(n_groups, self.pp)):
+            part = {"groups": jax.tree.map(lambda leaf: leaf[g0:g1],
+                                           handoff.state["groups"])}
+            if s == self.pp - 1 and "tail" in handoff.state:
+                part["tail"] = handoff.state["tail"]
+            self.stage_caches[s] = _install_state(
+                self.stage_caches[s], part, slot, table)
+        if self.stage_meshes is not None:
+            from repro import sharding as shd
+            self.stage_caches = [shd.shard_cache(self.cfg, c, m) for c, m
+                                 in zip(self.stage_caches, self.stage_meshes)]
 
     def _execute_packed(self, chunk: Optional[ChunkWork],
                         decodes: Sequence[DecodeWork],

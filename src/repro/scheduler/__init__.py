@@ -4,7 +4,9 @@ from repro.scheduler.policies import (POLICIES, OrcaScheduler,
                                       Scheduler)
 from repro.scheduler.budget import (BUDGETED_POLICIES, CHUNKED_POLICIES,
                                     SarathiServeScheduler)
+from repro.scheduler.router import DisaggRouter
 
 __all__ = ["Request", "State", "Scheduler", "SarathiScheduler",
            "OrcaScheduler", "RequestLevelScheduler", "SarathiServeScheduler",
-           "POLICIES", "CHUNKED_POLICIES", "BUDGETED_POLICIES"]
+           "POLICIES", "CHUNKED_POLICIES", "BUDGETED_POLICIES",
+           "DisaggRouter"]

@@ -1,0 +1,64 @@
+"""Request routing across phase-disaggregated replicas.
+
+A :class:`~repro.serving.disagg.ReplicaSet` runs N prefill replicas and M
+decode replicas; something has to decide *which* prefill replica admits an
+arriving request and *which* decode replica receives its KV handoff.  The
+router is that policy, and it is deliberately duck-typed: it only reads
+the load views a replica exposes (``prefill_load()`` / ``decode_load()``
+/ ``can_accept(req)``), so it has no dependency on the serving layer and
+can be unit-tested on stubs.
+
+Two policies, mirroring the DistServe deployment discussion:
+
+* ``least_loaded`` (default) — prefill requests go to the replica with
+  the fewest outstanding prefill TOKENS (queue depth in work, not request
+  count, since prompt lengths are heavy-tailed); handoffs go to the
+  accepting decode replica with the fewest resident requests;
+* ``round_robin`` — cyclic assignment, the stateless baseline.
+
+Routing never overrides capacity: :meth:`pick_decode` only considers
+replicas whose ``can_accept`` is true and returns ``None`` when every
+decode replica is full (the handoff then waits in the transfer queue).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+_POLICIES = ("least_loaded", "round_robin")
+
+
+class DisaggRouter:
+    """Phase-aware replica selection (see module docstring)."""
+
+    def __init__(self, policy: str = "least_loaded"):
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"have {sorted(_POLICIES)}")
+        self.policy = policy
+        self._rr_prefill = 0
+        self._rr_decode = 0
+
+    # ---------------------------------------------------------- selection
+    def pick_prefill(self, replicas: Sequence):
+        """The prefill replica that should admit the next arrival."""
+        if not replicas:
+            raise ValueError("no prefill replicas")
+        if self.policy == "round_robin":
+            r = replicas[self._rr_prefill % len(replicas)]
+            self._rr_prefill += 1
+            return r
+        return min(replicas, key=lambda r: r.prefill_load())
+
+    def pick_decode(self, replicas: Sequence, req) -> Optional[object]:
+        """The decode replica that should receive ``req``'s KV handoff,
+        or ``None`` when no replica can currently accept it."""
+        if not replicas:
+            raise ValueError("no decode replicas")
+        ok = [r for r in replicas if r.can_accept(req)]
+        if not ok:
+            return None
+        if self.policy == "round_robin":
+            r = ok[self._rr_decode % len(ok)]
+            self._rr_decode += 1
+            return r
+        return min(ok, key=lambda r: r.decode_load())

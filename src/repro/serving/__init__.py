@@ -2,6 +2,8 @@ from repro.serving.server import IterationStats, Server, ServeResult
 from repro.serving.online import (CostModelExecutor, EngineExecutor,
                                   IterationRecord, OnlineResult, OnlineServer,
                                   serve_online, serve_online_pipelined)
+from repro.serving.disagg import (DisaggResult, HandoffRecord, Replica,
+                                  ReplicaSet, serve_disaggregated)
 from repro.serving.metrics import (PipelineStats, RequestTrace,
                                    ServingSummary, Stat, format_table,
                                    percentile, summarize)
@@ -12,6 +14,8 @@ __all__ = [
     "Server", "ServeResult", "IterationStats",
     "OnlineServer", "OnlineResult", "IterationRecord", "serve_online",
     "serve_online_pipelined",
+    "ReplicaSet", "Replica", "DisaggResult", "HandoffRecord",
+    "serve_disaggregated",
     "EngineExecutor", "CostModelExecutor",
     "PipelineStats",
     "RequestTrace", "ServingSummary", "Stat", "percentile", "summarize",

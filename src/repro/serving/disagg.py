@@ -1,0 +1,436 @@
+"""Phase-disaggregated serving: prefill replicas + decode replicas + KV
+handoff (DistServe, arXiv 2401.09670, measured against SARATHI's
+piggybacking in one harness).
+
+SARATHI's decode-maximal batches fuse both phases inside ONE engine so
+decodes ride the prefill's weight fetch; DistServe argues the phases want
+*different* resources — prefill is compute-bound and latency-insensitive
+per token, decode is memory-bound and TBT-critical — and splits them onto
+separate replica pools with their own parallelism degrees.  This module
+runs that split on the existing engines:
+
+* a :class:`Replica` is an ordinary ``Engine`` / ``PipelineEngine`` (its
+  own ``tp`` / ``pp``) behind its own scheduler, playing one *role*:
+  ``prefill`` replicas admit arrivals and run prompts to the first token;
+  ``decode`` replicas carry the decode phase to completion;
+* when a request finishes prefill, its cache state is **extracted**
+  (``Engine.extract_request``: dense slot rows, or paged block contents
+  gathered through the block table), transferred, and **installed** into
+  a decode replica's cache under a freshly allocated slot / block table
+  (``Engine.install_request``).  The handoff is a pure cache relocation —
+  under greedy sampling the token stream is bit-identical to the
+  monolithic engine (pinned by tests/test_disagg.py) — and is charged on
+  the virtual clock as the cost model's per-token
+  :func:`repro.sim.cost_model.kv_transfer_time` term;
+* a :class:`repro.scheduler.DisaggRouter` picks the admitting prefill
+  replica per arrival and the receiving decode replica per handoff.
+
+The event loop is the multi-server generalisation of
+:func:`repro.serving.online.serve_online`: every replica keeps its own
+virtual clock, the loop always advances the replica that can do useful
+work earliest, and replicas couple only through arrivals and the
+KV-handoff queue.  Executors are pluggable exactly as in the single-engine
+loop — real engines measure wall-clock iterations, and
+:class:`~repro.serving.online.CostModelExecutor` replicas make the same
+schedule run against the analytical cost model at paper scale
+(``benchmarks/disagg.py`` reports both columns).
+
+Intra-replica behaviour is untouched: a ``pp > 1`` replica executes its
+micro-batch stage-by-stage (no intra-replica overlap in this loop), and a
+preemption on either side stays local (recompute on the replica that
+evicted, exactly the resident semantics).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sampling import SamplingParams
+from repro.scheduler import DisaggRouter, Request
+from repro.scheduler.request import State
+from repro.serving.metrics import RequestTrace, ServingSummary, summarize
+from repro.serving.online import (CostModelExecutor, EngineExecutor,
+                                  IterationRecord)
+
+# transfer(req) -> (delay_seconds, n_bytes) for one prefill->decode handoff
+TransferFn = Callable[[Request], Tuple[float, float]]
+
+
+class Replica:
+    """One engine (or cost-model) behind its own scheduler, with a role
+    and a private virtual clock.  Exposes the duck-typed load views the
+    :class:`~repro.scheduler.DisaggRouter` routes on."""
+
+    def __init__(self, name: str, role: str, scheduler, executor):
+        if role not in ("prefill", "decode"):
+            raise ValueError(f"role must be prefill|decode, got {role!r}")
+        self.name = name
+        self.role = role
+        self.scheduler = scheduler
+        self.executor = executor
+        self.clock = 0.0
+        self.iterations: List[IterationRecord] = []
+        self.n_rejected_seen = 0
+
+    # ------------------------------------------------------- router views
+    def prefill_load(self) -> int:
+        """Outstanding prefill TOKENS (queued + admitted): prompt lengths
+        are heavy-tailed, so queue depth in work beats request count."""
+        s = self.scheduler
+        return (sum(r.prefill_remaining for r in s.waiting)
+                + sum(r.prefill_remaining for r in s.running))
+
+    def decode_load(self) -> int:
+        s = self.scheduler
+        return len(s.running) + len(s.waiting)
+
+    def can_accept(self, req: Request) -> bool:
+        """Can this replica take ``req``'s KV handoff right now?  Slot
+        room (queued recompute victims count — they will reclaim slots)
+        plus pool room for the request's cached context, with append
+        semantics: the request was already admitted once, the watermark
+        does not re-apply (same rule as preempted readmission)."""
+        s = self.scheduler
+        if len(s.running) + len(s.waiting) >= s.n_slots:
+            return False
+        bm = getattr(s, "block_manager", None)
+        if bm is not None and not bm.can_allocate(req.context_len,
+                                                  watermark=False):
+            return False
+        return True
+
+    @property
+    def busy_time(self) -> float:
+        return sum(i.duration for i in self.iterations)
+
+
+@dataclass
+class HandoffRecord:
+    """One completed prefill->decode KV relocation (ledger entry)."""
+    req_id: int
+    src: str                     # prefill replica name
+    dst: str = ""                # decode replica name (set at install)
+    t_extracted: float = 0.0     # prefill-side completion time
+    t_installed: float = 0.0     # decode-side availability time
+    n_tokens: int = 0            # cached KV positions moved
+    n_blocks: int = 0            # paged blocks moved (0 = dense rows)
+    n_bytes: float = 0.0         # modelled payload size
+    delay: float = 0.0           # charged transfer delay (cost model)
+
+
+@dataclass
+class _InFlight:
+    ready: float
+    req: Request
+    payload: object
+    record: HandoffRecord
+
+
+@dataclass
+class DisaggResult:
+    """Outcome of one disaggregated serving run."""
+    traces: Dict[int, RequestTrace]
+    outputs: Dict[int, List[int]]
+    handoffs: List[HandoffRecord] = field(default_factory=list)
+    replicas: List[Replica] = field(default_factory=list)
+    makespan: float = 0.0
+    n_preemptions: int = 0
+
+    @property
+    def n_handoffs(self) -> int:
+        return len(self.handoffs)
+
+    @property
+    def kv_transfer_bytes(self) -> float:
+        return sum(h.n_bytes for h in self.handoffs)
+
+    @property
+    def kv_transfer_time(self) -> float:
+        """Total charged transfer delay (the cost-model term, summed)."""
+        return sum(h.delay for h in self.handoffs)
+
+    def summary(self) -> ServingSummary:
+        return summarize(self.traces.values(), makespan=self.makespan)
+
+    def replica_utilization(self) -> Dict[str, float]:
+        """Busy share of the makespan per replica — the goodput view the
+        DistServe comparison is about (an idle decode pool at low load is
+        the cost of disaggregation; a stalled one is its win)."""
+        if self.makespan <= 0:
+            return {r.name: 0.0 for r in self.replicas}
+        return {r.name: r.busy_time / self.makespan for r in self.replicas}
+
+
+def serve_disaggregated(prefill: Sequence[Replica],
+                        decode: Sequence[Replica],
+                        requests: Sequence[Request], *,
+                        router: Optional[DisaggRouter] = None,
+                        transfer: Optional[TransferFn] = None,
+                        warmup: bool = True,
+                        max_iterations: int = 1_000_000) -> DisaggResult:
+    """Drive timestamped requests through the two replica pools.
+
+    Discrete-event semantics: each replica owns a virtual clock; the loop
+    repeatedly advances the replica that can start useful work earliest
+    (running work -> its clock; otherwise the next arrival / queued
+    handoff it could serve).  Arrivals are routed to a prefill replica at
+    delivery time (so the router sees live load), handoffs are routed to
+    a decode replica at install time and wait in the transfer queue while
+    every decode replica is full.
+    """
+    router = router or DisaggRouter()
+    transfer = transfer or (lambda req: (0.0, 0.0))
+    replicas = list(prefill) + list(decode)
+    if not prefill or not decode:
+        raise ValueError("need at least one prefill and one decode replica")
+    seen = set()
+    for r in replicas:
+        if r.name in seen:
+            raise ValueError(f"duplicate replica name {r.name!r}")
+        seen.add(r.name)
+    if warmup:
+        for r in replicas:
+            r.executor.warmup()
+
+    pending = sorted(requests, key=lambda q: (q.arrival_time, q.req_id))
+    traces = {q.req_id: RequestTrace(q.req_id, q.arrival_time)
+              for q in requests}
+    result = DisaggResult(traces=traces, outputs={}, replicas=replicas)
+    inflight: List[_InFlight] = []
+
+    def next_work_time(r: Replica) -> Optional[float]:
+        s = r.scheduler
+        if s.running:
+            return r.clock
+        events = [q.arrival_time for q in s.waiting]
+        if r.role == "prefill" and pending:
+            events.append(pending[0].arrival_time)
+        if r.role == "decode" and inflight:
+            events.append(min(h.ready for h in inflight))
+        if not events:
+            return None
+        return max(r.clock, min(events))
+
+    def try_inject(now: float):
+        """Install every due handoff whose router pick has capacity."""
+        for h in sorted(inflight, key=lambda h: h.ready):
+            if h.ready > now:
+                break
+            dst = router.pick_decode(decode, h.req)
+            if dst is None:                 # every decode replica is full
+                continue
+            inflight.remove(h)
+            dst.executor.admit(h.req)       # fresh slot (wiped)
+            dst.executor.install(h.req, h.payload)
+            dst.scheduler.running.append(h.req)
+            h.record.dst = dst.name
+            h.record.t_installed = max(h.ready, dst.clock)
+            # the KV is not on the receiving replica before the transfer
+            # drains: an idle replica's stale clock must not let it decode
+            # in the past (token times would go non-monotonic and TBT
+            # negative); a busy replica (clock >= ready) is unaffected
+            dst.clock = h.record.t_installed
+            result.handoffs.append(h.record)
+
+    for _ in range(max_iterations):
+        cands = [(t, i) for i, r in enumerate(replicas)
+                 if (t := next_work_time(r)) is not None]
+        if not cands:
+            break
+        t, idx = min(cands)
+        r = replicas[idx]
+        r.clock = t
+        while pending and pending[0].arrival_time <= t:
+            router.pick_prefill(prefill).scheduler.submit(pending.pop(0))
+        try_inject(t)
+
+        def release(req: Request):
+            r.executor.release(req)
+            tr = traces[req.req_id]
+            tr.finish = r.clock
+            tr.n_preemptions = req.n_preemptions
+            tr.recompute_tokens = req.recompute_tokens
+            result.outputs[req.req_id] = list(req.output)
+
+        def preempt(req: Request):
+            r.executor.preempt(req)
+            result.n_preemptions += 1
+            tr = traces[req.req_id]
+            tr.n_preemptions += 1
+            tr.recompute_tokens += req.context_len
+
+        kwargs = {"now": t} if getattr(r.scheduler, "supports_time",
+                                       False) else {}
+        if getattr(r.scheduler, "supports_preempt", False):
+            kwargs["preempt_hook"] = preempt
+        plan = r.scheduler.next_plan(admit_hook=r.executor.admit, **kwargs)
+        # unservable-at-this-geometry rejections terminate with no output
+        for req in getattr(r.scheduler, "rejected",
+                           [])[r.n_rejected_seen:]:
+            traces[req.req_id].finish = t
+            result.outputs[req.req_id] = []
+            r.n_rejected_seen += 1
+        if plan is None:
+            nxt = next_work_time(r)
+            if nxt is not None and nxt <= t:   # pragma: no cover - safety
+                raise RuntimeError(f"replica {r.name} stalled at t={t}")
+            continue
+
+        tokens, dt = r.executor(plan)
+        r.clock = t + dt
+        for c in plan.chunks:
+            traces[c.req_id].mark_scheduled(t)
+        for d in plan.decodes:
+            traces[d.req_id].mark_scheduled(t)
+        for rid in tokens:
+            traces[rid].token_times.append(r.clock)
+        bm = getattr(r.scheduler, "block_manager", None)
+        r.iterations.append(IterationRecord(
+            t, dt, plan.n_prefill_tokens, plan.n_decode_tokens,
+            pool_blocks_used=bm.n_used if bm is not None else 0,
+            pool_blocks_total=bm.n_usable if bm is not None else 0))
+        r.scheduler.on_tokens(tokens, release_hook=release)
+
+        if r.role == "prefill":
+            # prefill-complete survivors (first token sampled, more to
+            # come) leave this replica: extract, release, enqueue the
+            # transfer.  Requests that FINISHED on the first token were
+            # already retired by on_tokens above.
+            done = [q for q in r.scheduler.running
+                    if q.state == State.DECODING]
+            for req in done:
+                payload = r.executor.extract(req)
+                r.scheduler.running.remove(req)
+                r.executor.release(req)      # slot + source pool blocks
+                delay, n_bytes = transfer(req)
+                rec = HandoffRecord(
+                    req_id=req.req_id, src=r.name, t_extracted=r.clock,
+                    n_tokens=req.decode_position,
+                    n_blocks=getattr(payload, "n_blocks", 0),
+                    n_bytes=n_bytes, delay=delay)
+                inflight.append(_InFlight(ready=r.clock + delay, req=req,
+                                          payload=payload, record=rec))
+
+    if inflight:                              # pragma: no cover - safety
+        raise RuntimeError(f"{len(inflight)} KV handoffs never installed")
+    result.makespan = max([r.clock for r in replicas] + [0.0])
+    return result
+
+
+# --------------------------------------------------------------------------
+# convenience construction: one model, two phase pools
+# --------------------------------------------------------------------------
+class ReplicaSet:
+    """N prefill + M decode replicas of one model, with KV handoff — the
+    disaggregated counterpart of :class:`repro.serving.OnlineServer`.
+
+    Every replica is built through the same
+    ``build_engine_and_scheduler`` path as the monolithic servers, so
+    paged pools, TP sharding and pipeline stages compose unchanged;
+    ``prefill_tp``/``decode_tp`` (and ``*_pp``) give each phase its own
+    parallelism degree — the DistServe knob.  ``prefill_chunked`` selects
+    SARATHI chunked prefills on the prefill side (the *hybrid* mode) vs
+    whole-prompt prefills (classic disaggregation); decode replicas never
+    see a prompt, only installed KV.
+
+    ``hw`` (a :class:`repro.sim.Hardware`) prices each handoff with the
+    cost model's :func:`~repro.sim.cost_model.kv_transfer_time` term over
+    :func:`~repro.sim.cost_model.kv_handoff_bytes`; without it the
+    relocation is charged zero time (pure-identity tests).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_prefill: int = 1,
+                 n_decode: int = 1, chunk_size: int = 256,
+                 prefill_chunked: bool = True, n_slots: int = 8,
+                 max_len: int = 4096, max_prompt_len: Optional[int] = None,
+                 token_budget: Optional[int] = None, dtype=jnp.float32,
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None, watermark: float = 0.0,
+                 prefill_tp: int = 1, decode_tp: int = 1,
+                 prefill_pp: int = 1, decode_pp: int = 1,
+                 devices: Optional[Sequence] = None, hw=None,
+                 router: str = "least_loaded"):
+        from repro.serving.server import build_engine_and_scheduler
+        self.cfg = cfg
+        self.hw = hw
+        self.router = DisaggRouter(router)
+        prefill_chunk = chunk_size if prefill_chunked \
+            else (max_prompt_len or max_len)
+        devs = list(devices) if devices is not None else None
+        off = 0
+
+        def take(n):
+            nonlocal off
+            if devs is None or len(devs) < off + n:
+                return None
+            got = devs[off:off + n]
+            off += n
+            return got
+
+        def make(role, i, chunk, tp, pp):
+            engine, sched = build_engine_and_scheduler(
+                cfg, params, policy="sarathi_serve", chunk_size=chunk,
+                n_slots=n_slots, max_len=max_len,
+                max_prompt_len=max_prompt_len, token_budget=token_budget,
+                dtype=dtype, sampling=sampling, seed=seed, paged=paged,
+                block_size=block_size, n_blocks=n_blocks,
+                watermark=watermark, pp=pp, tp=tp, devices=take(pp * tp),
+                policy_kwargs={"admit_backoff": False})
+            return Replica(f"{role}{i}", role, sched,
+                           EngineExecutor(engine))
+
+        self.prefill = [make("prefill", i, prefill_chunk, prefill_tp,
+                             prefill_pp) for i in range(n_prefill)]
+        self.decode = [make("decode", i, chunk_size, decode_tp, decode_pp)
+                       for i in range(n_decode)]
+
+    @classmethod
+    def simulated(cls, cfg: ModelConfig, hw, *, n_prefill: int = 1,
+                  n_decode: int = 1, chunk_size: int = 256,
+                  prefill_chunked: bool = True, n_slots: int = 8,
+                  max_prompt_len: int = 4096,
+                  token_budget: Optional[int] = None,
+                  prefill_tp: int = 1, decode_tp: int = 1,
+                  router: str = "least_loaded") -> "ReplicaSet":
+        """Cost-model replicas (no engines): the same schedulers and the
+        same event loop timed by the §5.3 analytical model — what the
+        ``benchmarks/disagg.py`` paper-scale cross-check runs."""
+        from repro.scheduler import POLICIES
+        self = cls.__new__(cls)
+        self.cfg = cfg
+        self.hw = hw
+        self.router = DisaggRouter(router)
+        prefill_chunk = chunk_size if prefill_chunked else max_prompt_len
+
+        def make(role, i, chunk, tp):
+            sched = POLICIES["sarathi_serve"](
+                n_slots=n_slots, max_decodes=max(n_slots - 1, 1),
+                chunk_size=chunk, token_budget=token_budget,
+                admit_backoff=False)
+            return Replica(f"{role}{i}", role, sched,
+                           CostModelExecutor(cfg, hw, n_chips=tp))
+
+        self.prefill = [make("prefill", i, prefill_chunk, prefill_tp)
+                        for i in range(n_prefill)]
+        self.decode = [make("decode", i, chunk_size, decode_tp)
+                       for i in range(n_decode)]
+        return self
+
+    # ----------------------------------------------------------- transfer
+    def _transfer(self, req: Request) -> Tuple[float, float]:
+        from repro.sim.cost_model import kv_handoff_bytes, kv_transfer_time
+        n_bytes = kv_handoff_bytes(self.cfg, req.decode_position)
+        if self.hw is None:
+            return 0.0, n_bytes
+        return kv_transfer_time(self.hw, n_bytes), n_bytes
+
+    def run(self, requests: Sequence[Request], *, warmup: bool = True,
+            max_iterations: int = 1_000_000) -> DisaggResult:
+        return serve_disaggregated(
+            self.prefill, self.decode, requests, router=self.router,
+            transfer=self._transfer, warmup=warmup,
+            max_iterations=max_iterations)

@@ -61,6 +61,14 @@ class EngineExecutor:
         preserved so warmed and cold engines replay identically."""
         self.engine.warmup()
 
+    def extract(self, req: Request):
+        """Pull the request's KV state off the engine for a replica
+        handoff (phase-disaggregated serving, :mod:`repro.serving.disagg`)."""
+        return self.engine.extract_request(req.req_id)
+
+    def install(self, req: Request, handoff):
+        self.engine.install_request(req.req_id, handoff)
+
     def __call__(self, plan: IterationPlan) -> Tuple[Dict[int, int], float]:
         t0 = time.perf_counter()
         tokens = self.engine.execute(plan)
@@ -95,6 +103,14 @@ class CostModelExecutor:
         pass
 
     def warmup(self):
+        pass
+
+    def extract(self, req: Request):
+        """No engine state to move — the disaggregated loop still charges
+        the modelled KV-transfer delay on the virtual clock."""
+        return None
+
+    def install(self, req: Request, handoff):
         pass
 
     def __call__(self, plan: IterationPlan) -> Tuple[Dict[int, int], float]:
@@ -371,7 +387,8 @@ class OnlineServer:
                  policy_kwargs: Optional[dict] = None, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0, pp: int = 1, tp: int = 1,
-                 devices=None, max_decodes: Optional[int] = None):
+                 devices=None, max_decodes: Optional[int] = None,
+                 force_pipeline: bool = False):
         from repro.serving.server import build_engine_and_scheduler
         self.cfg = cfg
         self.policy_name = policy
@@ -381,7 +398,8 @@ class OnlineServer:
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, policy_kwargs=policy_kwargs, paged=paged,
             block_size=block_size, n_blocks=n_blocks, watermark=watermark,
-            pp=pp, tp=tp, devices=devices, max_decodes=max_decodes)
+            pp=pp, tp=tp, devices=devices, max_decodes=max_decodes,
+            force_pipeline=force_pipeline)
         self.executor = EngineExecutor(self.engine)
 
     def run(self, requests: Sequence[Request], *, warmup: bool = True,

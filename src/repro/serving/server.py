@@ -32,7 +32,8 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                n_blocks: Optional[int] = None,
                                watermark: float = 0.0, pp: int = 1,
                                tp: int = 1, devices=None,
-                               max_decodes: Optional[int] = None):
+                               max_decodes: Optional[int] = None,
+                               force_pipeline: bool = False):
     """Shared construction for the offline Server and OnlineServer.
 
     Orca / request-level submit whole prompts as one 'chunk', so their
@@ -57,6 +58,12 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     token budgets and block accounting are per-replica quantities that do
     not change with intra-replica parallelism.
 
+    ``force_pipeline`` builds a :class:`PipelineEngine` even at ``pp=1``
+    (the degenerate one-stage pipeline, bit-identical to ``Engine``): the
+    pipelined serving loop then measures per-stage durations, which is
+    how ``benchmarks/pipeline.py --pp 1`` produces the no-pipeline
+    reference column for its bubble numbers.
+
     ``max_decodes`` caps the decodes the SCHEDULER piggybacks per
     iteration (default: every decoding request, ``n_slots - 1``).  With a
     pipelined engine a smaller cap (~``n_slots / pp``) spreads the
@@ -74,7 +81,7 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                sampling=sampling, seed=seed, paged=paged,
                block_size=block_size, n_blocks=n_blocks,
                watermark=watermark)
-    if pp > 1:
+    if pp > 1 or force_pipeline:
         engine = PipelineEngine(cfg, params, pp=pp, tp=tp, devices=devices,
                                 **ekw)
     else:

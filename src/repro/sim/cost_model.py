@@ -81,6 +81,26 @@ def tp_allreduce_time(hw: Hardware, n_bytes: float, tp: int) -> float:
     return 2.0 * (tp - 1) / tp * n_bytes / hw.link_bw + hw.kernel_overhead
 
 
+def kv_transfer_time(hw: Hardware, n_bytes: float) -> float:
+    """Relocate ``n_bytes`` of KV cache from one replica to another over
+    the inter-chip link (the DistServe prefill->decode handoff): a single
+    one-directional stream plus one launch overhead.  The per-token
+    companion of :func:`tp_allreduce_time` — where TP pays a recurring
+    per-layer synchronisation, phase disaggregation pays this ONCE per
+    request, at the prefill/decode boundary (``repro.serving.disagg``
+    charges it on the virtual clock between extract and install)."""
+    if n_bytes <= 0:
+        return 0.0
+    return n_bytes / hw.link_bw + hw.kernel_overhead
+
+
+def kv_handoff_bytes(cfg, n_tokens: int, dtype_bytes: int = BYTES) -> float:
+    """Payload of a prefill->decode KV handoff: the full-attention KV of
+    ``n_tokens`` cached positions (the same per-token footprint the
+    capacity model uses)."""
+    return float(n_tokens) * cfg.kv_bytes_per_token(dtype_bytes)
+
+
 def _attention_time(hw: Hardware, n_q: int, n_kv: int, n_heads: int,
                     n_kv_heads: int, head_dim: int) -> float:
     """Score + AV for n_q query tokens against n_kv cached tokens."""

@@ -98,25 +98,45 @@ except ImportError:                                       # fallback shim
         booleans=_Booleans, sampled_from=_SampledFrom, lists=_Lists)
 
     def given(*args, **strats):
-        if args:
-            raise TypeError("fallback given() supports keyword strategies "
-                            "only (pass name=strategy)")
+        if args and strats:
+            # same rule as real hypothesis: one style per decorator
+            raise TypeError("cannot mix positional and keyword strategies "
+                            "in given()")
         for name, s in strats.items():
             if not isinstance(s, _Strategy):
                 raise TypeError(f"{name}: not a strategy: {s!r}")
+        for i, s in enumerate(args):
+            if not isinstance(s, _Strategy):
+                raise TypeError(f"positional strategy {i}: not a "
+                                f"strategy: {s!r}")
 
         def deco(fn):
+            smap = strats
+            if args:
+                # hypothesis semantics: positional strategies bind to the
+                # RIGHTMOST parameters of the test (self / fixtures stay
+                # on the left), so both call styles collect identically
+                names = [p.name for p in
+                         inspect.signature(fn).parameters.values()
+                         if p.kind in (p.POSITIONAL_OR_KEYWORD,
+                                       p.KEYWORD_ONLY)]
+                if len(args) > len(names):
+                    raise TypeError(
+                        f"given() got {len(args)} positional strategies "
+                        f"for {len(names)} parameter(s) of {fn.__name__}")
+                smap = dict(zip(names[len(names) - len(args):], args))
+
             @functools.wraps(fn)
             def wrapper(*wargs, **wkw):
                 n = wrapper._max_examples or DEFAULT_MAX_EXAMPLES
                 rng = random.Random(fn.__qualname__)
                 for i in range(n):
                     if i == 0:
-                        kw = {k: s.bounds()[0] for k, s in strats.items()}
+                        kw = {k: s.bounds()[0] for k, s in smap.items()}
                     elif i == 1:
-                        kw = {k: s.bounds()[1] for k, s in strats.items()}
+                        kw = {k: s.bounds()[1] for k, s in smap.items()}
                     else:
-                        kw = {k: s.example(rng) for k, s in strats.items()}
+                        kw = {k: s.example(rng) for k, s in smap.items()}
                     try:
                         fn(*wargs, **kw, **wkw)
                     except Exception as e:
@@ -131,7 +151,7 @@ except ImportError:                                       # fallback shim
             sig = inspect.signature(fn)
             wrapper.__signature__ = sig.replace(parameters=[
                 p for name, p in sig.parameters.items()
-                if name not in strats])
+                if name not in smap])
             del wrapper.__wrapped__
             return wrapper
 

@@ -1,5 +1,14 @@
 import dataclasses
 import functools
+import os
+
+# Multi-device tests (tp x pp grids, pipeline stages) need forced host
+# devices, and XLA only honours the flag if it is set BEFORE the first
+# jax import — which happens right below.  setdefault keeps an explicit
+# export (e.g. a deliberate 1-device run) authoritative; without it the
+# tp/pp tests silently skipped under plain `pytest`.
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 
 import jax
 import pytest

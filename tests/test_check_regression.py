@@ -103,11 +103,17 @@ def test_main_end_to_end(tmp_path):
     gated = args + ["--benches", "latency_sweep"]
     grid = args + ["--benches", "pipeline_bubbles"]
 
-    assert main(args) == 1                       # fresh artifacts missing
+    # missing fresh artifacts: warn-and-skip by default (a bare 1-CPU
+    # checkout cannot produce the 8-device grid), fail under --strict
+    # (CI jobs DID run their benches, so absence is a real failure)
+    assert main(args) == 0
+    assert main(args + ["--strict"]) == 1
     _write(freshdir, "BENCH_latency.json",
            _payload("latency_sweep", [_row("sarathi_serve", 2, 95.0)]))
     assert main(gated) == 0                      # within tolerance
-    assert main(args) == 1                       # pipeline fresh missing
+    assert main(gated + ["--strict"]) == 0       # present: strict agrees
+    assert main(args) == 0                       # pipeline missing: skip
+    assert main(args + ["--strict"]) == 1        # ... but strict fails
     _write(freshdir, "BENCH_pipeline_tp.json",
            _payload("pipeline_bubbles",
                     [_grid_row("chunked", 2, 2, bub=0.7)]))
@@ -137,3 +143,24 @@ def test_main_end_to_end(tmp_path):
 
     # unknown bench names are rejected up front
     assert main(args + ["--benches", "nope"]) == 1
+
+
+def _disagg_row(mode, n_prefill, n_decode, tp=1, **kw):
+    return dict(mode=mode, n_prefill=n_prefill, n_decode=n_decode, tp=tp,
+                throughput=kw.pop("throughput", 1.0),
+                kv_transfer_s=kw.pop("kv", 1e-4), **kw)
+
+
+def test_disagg_mode_grid_is_identity_pinned():
+    """The disaggregation bench's mode grid is pinned like the tp x pp
+    grid: replica counts drifting fails, wall-clock numbers do not."""
+    base = _payload("disagg_modes", [_disagg_row("chunked", 0, 0),
+                                     _disagg_row("disagg", 1, 1)])
+    fresh = _payload("disagg_modes",
+                     [_disagg_row("chunked", 0, 0, throughput=9.0),
+                      _disagg_row("disagg", 1, 1, kv=5.0)])
+    assert compare(base, fresh, 0.20) == []
+    fresh = _payload("disagg_modes", [_disagg_row("chunked", 0, 0),
+                                      _disagg_row("disagg", 2, 1)])
+    errs = compare(base, fresh, 0.20)
+    assert len(errs) == 1 and "identity" in errs[0]

@@ -161,8 +161,8 @@ def test_rejects_memory_architectures():
 
 
 @pytest.mark.skipif(len(jax.devices()) < 2,
-                    reason="needs >= 2 devices (XLA_FLAGS="
-                           "--xla_force_host_platform_device_count=N)")
+                    reason="needs >= 2 devices (conftest forces 8 unless "
+                           "an explicit XLA_FLAGS export pins fewer)")
 def test_stages_live_on_distinct_devices():
     cfg, params = _cfg_params()
     engine = PipelineEngine(cfg, params, pp=2, n_slots=2, max_len=64,

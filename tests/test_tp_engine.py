@@ -14,9 +14,10 @@ Equivalence contract (README §Tensor-parallel x pipeline-parallel):
   than equality; on CPU's deterministic reductions the seeds below agree
   exactly, and the thresholds only leave room for tie flips.
 
-All tp>1 / pp>1 cases need forced host devices:
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
-test-multidevice job); on a single device they skip.
+All tp>1 / pp>1 cases need forced host devices; ``tests/conftest.py``
+forces 8 before the first jax import, so they run under plain ``pytest``.
+The ``_need`` guards only fire when an explicit ``XLA_FLAGS`` export
+deliberately pins a smaller device count.
 """
 import dataclasses
 import itertools
@@ -68,8 +69,8 @@ def _reqs(n=5, seed=0):
 def _need(n):
     return pytest.mark.skipif(
         len(jax.devices()) < n,
-        reason=f"needs >= {n} devices (XLA_FLAGS="
-               f"--xla_force_host_platform_device_count={n})")
+        reason=f"needs >= {n} devices (conftest forces 8 unless an "
+               f"explicit XLA_FLAGS export pins fewer)")
 
 
 def _prefix_agreement(ref: dict, got: dict):
