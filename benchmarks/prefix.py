@@ -1,0 +1,223 @@
+"""Prefix-cache sweep: prefill compute and TTFT vs shared-prefix fraction.
+
+Requests in a shared-system-prompt workload agree on their first
+``shared_frac * prompt_len`` tokens (per group).  With the prefix cache
+on, the paged pool serves those tokens from committed shared blocks, so
+admission charges only the novel suffix; with it off every request pays
+the full prefill.  For each fraction the sweep reports two columns:
+
+* ``cm_*``    — the serving loop against the deterministic analytical
+  cost model at PAPER scale (``--arch`` on ``--hw``): machine-independent
+  scheduler bookkeeping, gated in CI (prefill tokens and TTFT must drop
+  monotonically as the shared fraction rises);
+* ``measured_*`` — the REAL engine on a reduced CPU model, wall-clock
+  TTFT.  Absolute numbers are machine-dependent and only reported, but
+  the run doubles as the correctness gate: greedy outputs with the cache
+  on must be BIT-IDENTICAL to the cache-off run at every sweep point
+  (exit 1 on divergence).
+
+    PYTHONPATH=src python -m benchmarks.prefix \\
+        [--fracs 0,0.25,0.5,0.75,1] [--n 32] [--n-measured 12] \\
+        [--arch tinyllama-1.1b] [--hw a100-80gb] [--skip-measured]
+
+``--fracs 1`` is the resubmission limit: group members share the WHOLE
+prompt, so later arrivals take the trimmed full-prompt hit (all but one
+token cached, tail block forked copy-on-write).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.latency import write_bench_json
+
+ROW_FIELDS = ("shared_frac", "n_groups", "cache", "cm_prefill_tokens",
+              "cm_cached_tokens", "cm_hit_rate", "cm_ttft_p50",
+              "cm_ttft_p99", "measured_ttft_p50", "measured_cached_tokens")
+
+
+def _fmt(v):
+    if v is None:
+        return ""
+    return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+
+def cost_model_point(cfg, hw, reqs, *, cache: bool, chunk: int, slots: int,
+                     block_size: int, n_blocks: int):
+    """One deterministic serving run; returns (summary, prefill_tokens,
+    scheduler)."""
+    from repro.cache import BlockManager, PrefixCache
+    from repro.scheduler import SarathiServeScheduler
+    from repro.serving import CostModelExecutor, serve_online
+
+    bm = BlockManager(n_blocks, block_size)
+    sched = SarathiServeScheduler(
+        n_slots=slots, max_decodes=max(slots - 1, 1), chunk_size=chunk,
+        block_manager=bm, prefix_cache=PrefixCache(bm) if cache else None)
+    res = serve_online(sched, CostModelExecutor(cfg, hw), reqs)
+    prefill = sum(i.n_prefill_tokens for i in res.iterations)
+    return res.summary(), prefill, sched
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--hw", default="a100-80gb",
+                    help="hardware profile for the cost-model columns")
+    ap.add_argument("--fracs", default="0,0.25,0.5,0.75,1",
+                    help="comma-separated shared-prefix fractions")
+    ap.add_argument("--n", type=int, default=32,
+                    help="requests per cost-model point")
+    ap.add_argument("--n-measured", type=int, default=12,
+                    help="requests per real-engine point")
+    ap.add_argument("--n-groups", type=int, default=2,
+                    help="distinct shared prefixes per workload")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--n-decode", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="cost-model arrival rate (req/s)")
+    ap.add_argument("--measured-rate", type=float, default=5.0,
+                    help="real-engine arrival rate (wall-clock req/s)")
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="cost-model columns only (skips the engine runs "
+                         "AND the bit-identity gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_prefix.json",
+                    help="machine-readable artifact path ('' disables)")
+    args = ap.parse_args(argv)
+
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.serving import shared_prefix_workload
+    from repro.sim.hardware import PROFILES
+
+    if args.hw.lower() not in PROFILES:
+        ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
+    hw = PROFILES[args.hw.lower()]
+    full_cfg = get_config(args.arch)
+    fracs = [float(f) for f in args.fracs.split(",") if f]
+    if any(not 0.0 <= f <= 1.0 for f in fracs):
+        ap.error("--fracs values must lie in [0, 1]")
+    bs, P = args.block_size, args.prompt_len
+
+    def split(frac):
+        """Block-aligned (shared_len, unique_len) for a fraction: hits are
+        whole blocks, so anything below one block shares nothing."""
+        shared = int(frac * P) // bs * bs
+        return shared, P - shared
+
+    def workload(frac, n, rate, vocab):
+        shared, unique = split(frac)
+        return shared_prefix_workload(
+            n, shared_len=shared, unique_len=unique, n_decode=args.n_decode,
+            n_groups=args.n_groups, rate=rate, vocab_size=vocab,
+            seed=args.seed)
+
+    measured = {}
+    if not args.skip_measured:
+        import jax
+
+        from repro.models import build_model
+        from repro.serving import OnlineServer
+
+        base = full_cfg.reduced()
+        heads = max(base.n_heads // 2, 1)
+        cfg_r = dataclasses.replace(
+            base, n_layers=2, d_model=128, n_heads=heads,
+            n_kv_heads=min(base.n_kv_heads, heads), head_dim=128 // heads,
+            d_ff=256, vocab_size=min(base.vocab_size, 512))
+        params = build_model(cfg_r).init_params(jax.random.PRNGKey(args.seed))
+        max_len = -(-(P + args.n_decode + 1) // bs) * bs + bs
+        for frac in fracs:
+            runs = {}
+            for cache in (False, True):
+                reqs = workload(frac, args.n_measured, args.measured_rate,
+                                cfg_r.vocab_size)
+                srv = OnlineServer(cfg_r, params, chunk_size=args.chunk,
+                                   n_slots=args.slots, max_len=max_len,
+                                   max_prompt_len=P, paged=True,
+                                   block_size=bs, seed=args.seed,
+                                   prefix_cache=cache)
+                res = srv.run(reqs)
+                runs[cache] = (reqs, res)
+            (off_reqs, off), (on_reqs, on) = runs[False], runs[True]
+            for a, b in zip(off_reqs, on_reqs):
+                if off.outputs[a.req_id] != on.outputs[b.req_id]:
+                    print(f"IDENTITY VIOLATION at shared_frac={frac:g}: "
+                          f"prompt #{a.req_id} decoded "
+                          f"{off.outputs[a.req_id]} without the cache but "
+                          f"{on.outputs[b.req_id]} with it", file=sys.stderr)
+                    return 1
+            measured[frac] = {False: off.summary(), True: on.summary()}
+
+    print(",".join(ROW_FIELDS))
+    rows, cm_on = [], []
+    for frac in fracs:
+        blocks_per_req = -(-(P + args.n_decode) // bs) + 1
+        n_blocks = max(args.n * blocks_per_req + 1, 64)
+        for cache in (False, True):
+            reqs = workload(frac, args.n, args.rate, full_cfg.vocab_size)
+            s, prefill, _ = cost_model_point(
+                full_cfg, hw, reqs, cache=cache, chunk=args.chunk,
+                slots=args.slots, block_size=bs, n_blocks=n_blocks)
+            m = measured.get(frac, {}).get(cache)
+            row = dict(shared_frac=frac, n_groups=args.n_groups,
+                       cache="on" if cache else "off",
+                       cm_prefill_tokens=prefill,
+                       cm_cached_tokens=s.cached_tokens,
+                       cm_hit_rate=s.hit_rate,
+                       cm_ttft_p50=s.ttft.p50, cm_ttft_p99=s.ttft.p99,
+                       measured_ttft_p50=m.ttft.p50 if m else None,
+                       measured_cached_tokens=m.cached_tokens if m else None)
+            rows.append(row)
+            if cache:
+                cm_on.append(row)
+            print(",".join(_fmt(row[f]) for f in ROW_FIELDS))
+
+    # the CI gate: with the cache on, scheduled prefill work and TTFT must
+    # fall monotonically as the shared fraction (≈ attainable hit rate)
+    # rises; both columns are cost-model-deterministic, so a violation is
+    # a real scheduling/sharing regression, not noise.  Fractions whose
+    # block-aligned shared length ties the previous point may tie.
+    failures = []
+    for prev, cur in zip(cm_on, cm_on[1:]):
+        same_split = split(prev["shared_frac"]) == split(cur["shared_frac"])
+        for col in ("cm_prefill_tokens", "cm_ttft_p50"):
+            ok = (cur[col] <= prev[col] if same_split
+                  else cur[col] < prev[col] or prev[col] == 0)
+            if not ok:
+                failures.append(
+                    f"{col} rose {prev[col]:.6g} -> {cur[col]:.6g} between "
+                    f"shared_frac {prev['shared_frac']:g} and "
+                    f"{cur['shared_frac']:g}")
+    for f in cm_on:
+        off_row = next(r for r in rows if r["cache"] == "off"
+                       and r["shared_frac"] == f["shared_frac"])
+        if f["cm_prefill_tokens"] > off_row["cm_prefill_tokens"]:
+            failures.append(f"cache-on prefill exceeds cache-off at "
+                            f"shared_frac {f['shared_frac']:g}")
+    if failures:
+        for msg in failures:
+            print(f"MONOTONICITY VIOLATION: {msg}", file=sys.stderr)
+        return 1
+    hi = [r for r in cm_on if split(r["shared_frac"])[0] * 2 >= P]
+    if hi:
+        lo = cm_on[0]
+        print(f"# >=50% shared prefix: prefill {hi[-1]['cm_prefill_tokens']}"
+              f" vs {lo['cm_prefill_tokens']} tokens at "
+              f"shared_frac={lo['shared_frac']:g}, TTFT p50 "
+              f"{hi[-1]['cm_ttft_p50']:.6g}s vs {lo['cm_ttft_p50']:.6g}s — "
+              f"matches the prefix-sharing prediction", file=sys.stderr)
+    if args.json:
+        write_bench_json(args.json, name="prefix_sweep",
+                         params=vars(args), rows=rows)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,12 +41,24 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=None,
                     help="pool size (default: dense-equivalent capacity; "
                          "shrink to exercise preemption)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share committed prompt blocks across requests "
+                         "(requires --paged; README §Prefix caching)")
+    ap.add_argument("--shared-frac", type=float, default=0.5,
+                    help="with --prefix-cache: fraction of each prompt "
+                         "drawn from a common system prefix")
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline-parallel stages (1 = single device)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel chips (per stage with --pp; "
                          "pp*tp devices total)")
     args = ap.parse_args()
+
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (shared blocks live in "
+                 "the block pool)")
+    if args.prefix_cache and args.policy != "sarathi_serve":
+        ap.error("--prefix-cache requires --policy sarathi_serve")
 
     if args.pp * args.tp > 1:
         # must land before the first jax call locks the device count
@@ -58,20 +70,33 @@ def main():
 
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serving import OnlineServer, format_table, online_workload
+    from repro.serving import (OnlineServer, format_table, online_workload,
+                               shared_prefix_workload)
 
     cfg = get_config(args.arch).reduced()
     params = build_model(cfg).init_params(jax.random.PRNGKey(args.seed))
 
-    reqs = online_workload(args.n, rate=args.rate, pd_ratio=8.0,
-                           min_len=16, max_len=64,
-                           vocab_size=cfg.vocab_size, seed=args.seed)
+    if args.prefix_cache:
+        # a workload the cache can actually hit: one system prefix per
+        # group, unique user tails
+        shared = int(48 * args.shared_frac) // args.block_size \
+            * args.block_size
+        reqs = shared_prefix_workload(args.n, shared_len=shared,
+                                      unique_len=max(48 - shared, 1),
+                                      n_decode=8, rate=args.rate,
+                                      vocab_size=cfg.vocab_size,
+                                      seed=args.seed)
+    else:
+        reqs = online_workload(args.n, rate=args.rate, pd_ratio=8.0,
+                               min_len=16, max_len=64,
+                               vocab_size=cfg.vocab_size, seed=args.seed)
     srv = OnlineServer(cfg, params, policy=args.policy,
                        chunk_size=args.chunk, n_slots=args.slots,
                        token_budget=args.budget, max_len=512,
                        max_prompt_len=64, paged=args.paged,
                        block_size=args.block_size, n_blocks=args.n_blocks,
-                       pp=args.pp, tp=args.tp)
+                       pp=args.pp, tp=args.tp,
+                       prefix_cache=args.prefix_cache)
     res = srv.run(reqs)
 
     hybrid = sum(1 for it in res.iterations

@@ -52,5 +52,6 @@ bit-identical, so preemption is invisible in the output stream and shows
 up only as latency (tracked per request as ``recompute_tokens``).
 """
 from repro.cache.block_manager import BlockManager, PoolExhausted
+from repro.cache.prefix_cache import PrefixCache
 
-__all__ = ["BlockManager", "PoolExhausted"]
+__all__ = ["BlockManager", "PoolExhausted", "PrefixCache"]

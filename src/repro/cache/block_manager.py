@@ -6,11 +6,33 @@ tables into the int32 arrays the packed step consumes.  One manager is
 shared by the engine and the (block-aware) scheduler so admission checks,
 decode reservations and the engine's lazy per-chunk allocation all see the
 same free list.
+
+Prefix sharing (copy-on-write)
+------------------------------
+Every allocated physical block carries a **reference count**: normally 1
+(one table entry), but a block may be mapped into several requests' tables
+at once (:meth:`share` — prefix-cache hits) and/or pinned by the
+:class:`~repro.cache.prefix_cache.PrefixCache` index.  The discipline is
+vLLM's:
+
+* a FULL block is immutable — sharing it is a pure refcount increment;
+* a request about to WRITE into a block it does not exclusively own must
+  fork it first (:meth:`prepare_write` — copy-on-write): a fresh block is
+  allocated, the table entry is swapped, and the (src, dst) pair is
+  returned so the engine can copy the block's KV contents before the
+  packed step runs;
+* :meth:`free` DECREMENTS instead of releasing: a block only returns to
+  the free list when its last reference drops.
+
+Blocks whose only remaining reference is the prefix-cache index are
+**reclaimable**: capacity queries count them as available, and an
+allocation that would otherwise exhaust the pool evicts them LRU-first
+through the attached cache (:attr:`prefix_cache`).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -21,7 +43,8 @@ class PoolExhausted(RuntimeError):
 
 class BlockManager:
     """Fixed-size-block KV pool: free-list allocation, watermark-gated
-    admission, per-request block tables, free-on-finish.
+    admission, per-request block tables, refcounted sharing with
+    copy-on-write forks, free-on-finish.
 
     Block 0 is reserved as the scratch block (see ``repro.cache``); the
     usable pool is blocks ``1 .. n_blocks - 1``.
@@ -42,6 +65,10 @@ class BlockManager:
         self.watermark_blocks = math.ceil(watermark * self.n_usable)
         self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
+        self._refs: Dict[int, int] = {}      # physical block -> live refs
+        # optional PrefixCache (attached by its constructor): the LRU
+        # index whose cache-only blocks are reclaimable under pressure
+        self.prefix_cache = None
 
     # ------------------------------------------------------------- queries
     @property
@@ -53,8 +80,25 @@ class BlockManager:
         return self.n_usable - self.n_free
 
     @property
+    def n_referenced(self) -> int:
+        """Blocks currently holding at least one reference (table entries
+        + prefix-cache pins).  ``n_free + n_referenced == n_usable`` is the
+        pool's conservation invariant (pinned by tests)."""
+        return len(self._refs)
+
+    @property
+    def n_reclaimable(self) -> int:
+        """Blocks whose only reference is the prefix-cache index — they
+        can be evicted on demand, so capacity checks count them free."""
+        return (self.prefix_cache.n_evictable
+                if self.prefix_cache is not None else 0)
+
+    @property
     def utilization(self) -> float:
         return self.n_used / self.n_usable if self.n_usable else 0.0
+
+    def refcount(self, block: int) -> int:
+        return self._refs.get(block, 0)
 
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return max(0, -(-int(n_tokens) // self.block_size))
@@ -81,45 +125,130 @@ class BlockManager:
         """Would a fresh ``n_tokens`` allocation fit?  With ``watermark``
         (admission semantics) the post-allocation free count must stay
         above the watermark; without (append semantics) any fit counts."""
-        need = self.blocks_for_tokens(n_tokens)
+        return self.can_allocate_blocks(self.blocks_for_tokens(n_tokens),
+                                        watermark=watermark)
+
+    def can_allocate_blocks(self, n: int, *, watermark: bool = True) -> bool:
+        """Block-granular :meth:`can_allocate` — what a prefix-aware
+        admission gate charges after subtracting its hit blocks."""
         floor = self.watermark_blocks if watermark else 0
-        return self.n_free - need >= floor
+        return self.n_free + self.n_reclaimable - int(n) >= floor
 
     def can_append(self, req_id: int, n_tokens: int) -> bool:
         """Can ``req_id``'s table grow to cover ``n_tokens`` positions?
         Appends for already-running requests ignore the watermark."""
         need = self.blocks_for_tokens(n_tokens) \
             - len(self._tables.get(req_id, ()))
-        return need <= self.n_free
+        return need <= self.n_free + self.n_reclaimable
 
     def appendable_tokens(self, req_id: int) -> int:
         """Positions ``req_id`` could cover right now: already-allocated
-        capacity plus everything left in the free list (no watermark)."""
-        return self.allocated_tokens(req_id) + self.n_free * self.block_size
+        capacity plus everything left in the free list (no watermark),
+        counting evictable prefix-cache blocks as free."""
+        return self.allocated_tokens(req_id) \
+            + (self.n_free + self.n_reclaimable) * self.block_size
 
     # --------------------------------------------------------- allocation
+    def _alloc_one(self) -> int:
+        b = self._free.pop()
+        self._refs[b] = 1
+        return b
+
+    def incref(self, block: int):
+        """Add a reference to an allocated block (a prefix-cache pin or a
+        shared table entry)."""
+        if block not in self._refs:
+            raise ValueError(f"block {block} is not allocated")
+        self._refs[block] += 1
+
+    def _decref(self, block: int) -> bool:
+        """Drop one reference; returns True when the block actually went
+        back to the free list (last reference)."""
+        n = self._refs[block] - 1
+        if n:
+            self._refs[block] = n
+            return False
+        del self._refs[block]
+        self._free.append(block)
+        return True
+
+    def _reclaim(self, need: int):
+        """Evict prefix-cached blocks until ``need`` blocks are free (or
+        nothing evictable remains)."""
+        if self.prefix_cache is not None and need > self.n_free:
+            self.prefix_cache.evict(need - self.n_free)
+
     def ensure(self, req_id: int, n_tokens: int) -> List[int]:
         """Grow ``req_id``'s block table to cover ``n_tokens`` logical
         positions; returns the (possibly unchanged) table.  Idempotent —
         the scheduler's reservation and the engine's lazy per-chunk call
-        may both run for the same iteration."""
-        table = self._tables.setdefault(req_id, [])
-        need = self.blocks_for_tokens(n_tokens) - len(table)
+        may both run for the same iteration.  A failed grow for a NEW
+        request leaves no table entry behind (a stale empty table would
+        corrupt refcounts once blocks are shared)."""
+        held = self._tables.get(req_id)
+        need = self.blocks_for_tokens(n_tokens) - (len(held) if held else 0)
+        if need > self.n_free:
+            self._reclaim(need)
         if need > self.n_free:
             raise PoolExhausted(
                 f"req {req_id}: need {need} blocks, {self.n_free} free "
                 f"(n_blocks={self.n_blocks}, block_size={self.block_size})")
+        table = self._tables.setdefault(req_id, [])
         for _ in range(max(need, 0)):
-            table.append(self._free.pop())
+            table.append(self._alloc_one())
         return table
 
+    def share(self, req_id: int, blocks: Sequence[int]) -> List[int]:
+        """Map already-allocated ``blocks`` (a prefix-cache hit, in
+        prefix order) into ``req_id``'s table, taking a reference on each.
+        The request's table must be empty — hits are resolved at
+        admission, before any exclusive allocation."""
+        table = self._tables.setdefault(req_id, [])
+        if table:
+            raise ValueError(f"req {req_id} already holds {len(table)} "
+                             f"blocks; prefix sharing must come first")
+        for b in blocks:
+            self.incref(b)
+            table.append(b)
+        return table
+
+    def prepare_write(self, req_id: int, start: int, end: int
+                      ) -> List[Tuple[int, int]]:
+        """Copy-on-write fork for a write into positions ``[start, end)``:
+        every covered block the request does not exclusively own is
+        replaced by a fresh allocation, and the ``(src, dst)`` pairs are
+        returned so the engine can copy block contents BEFORE the write
+        lands.  Exclusive blocks (refcount 1) pass through untouched, so
+        this is free on the non-shared fast path."""
+        if end <= start:
+            return []
+        table = self._tables.get(req_id)
+        if table is None:
+            raise ValueError(f"req {req_id} holds no blocks")
+        pairs: List[Tuple[int, int]] = []
+        for i in range(start // self.block_size,
+                       (end - 1) // self.block_size + 1):
+            b = table[i]
+            if self._refs[b] == 1:
+                continue
+            if not self._free:
+                self._reclaim(1)
+            if not self._free:
+                raise PoolExhausted(
+                    f"req {req_id}: copy-on-write fork needs a free block "
+                    f"(n_blocks={self.n_blocks})")
+            nb = self._alloc_one()
+            self._decref(b)           # shared: never returns to free list
+            table[i] = nb
+            pairs.append((b, nb))
+        return pairs
+
     def free(self, req_id: int) -> int:
-        """Return all of ``req_id``'s blocks to the free list (idempotent:
-        the scheduler frees on finish/preempt and the engine frees on slot
-        release — whichever runs second is a no-op).  Returns the number
-        of blocks released."""
+        """Drop ``req_id``'s references (idempotent: the scheduler frees
+        on finish/preempt and the engine frees on slot release — whichever
+        runs second is a no-op).  Shared blocks merely decrement; returns
+        the number of blocks that actually went back to the free list."""
         table = self._tables.pop(req_id, None)
         if not table:
             return 0
-        self._free.extend(reversed(table))
-        return len(table)
+        return sum(self._decref(b) for b in reversed(table))

@@ -121,6 +121,36 @@ class KVHandoff:
     block_size: int              # source pool geometry (0 = dense)
 
 
+def _copy_blocks(cache, src, dst):
+    """Copy pool-block contents ``src[i] -> dst[i]`` on every paged KV
+    leaf (slot-indexed leaves pass through).  This is the device half of a
+    copy-on-write fork: the :class:`~repro.cache.BlockManager` swaps a
+    shared block out of the writer's table for a fresh one, and this copy
+    makes the fork hold the same KV before the write lands."""
+    def cp(path, leaf):
+        lead, is_pool = _leaf_kind(path)
+        if not is_pool:
+            return leaf
+        rows = leaf[(slice(None),) * lead + (src,)]
+        return leaf.at[(slice(None),) * lead + (dst,)].set(rows)
+
+    return jax.tree_util.tree_map_with_path(cp, cache)
+
+
+def _pad_pairs(pairs):
+    """(src, dst) int32 arrays for :func:`_copy_blocks`, padded to a power
+    of two with scratch->scratch no-op copies so the jitted copy only ever
+    compiles O(log) distinct shapes."""
+    n = 1
+    while n < len(pairs):
+        n *= 2
+    src = np.zeros((n,), np.int32)
+    dst = np.zeros((n,), np.int32)
+    for i, (s, d) in enumerate(pairs):
+        src[i], dst[i] = s, d
+    return jnp.asarray(src), jnp.asarray(dst)
+
+
 def _reset_slot(cache, slot):
     """Zero every slot-indexed cache leaf's row ``slot`` (-1 for integer
     leaves, which are ring-buffer position markers where -1 == empty).
@@ -269,6 +299,7 @@ class Engine:
         self._step = jax.jit(self._step_impl, donate_argnums=(2,))
         self._seed_cross = jax.jit(self.model.seed_cross_kv)
         self._reset_slot = jax.jit(_reset_slot)
+        self._cow_blocks = jax.jit(_copy_blocks, donate_argnums=(0,))
         self.iterations = 0
 
     @property
@@ -453,12 +484,22 @@ class Engine:
         db = np.zeros((self.D, M), np.int32)
         if self.paged:
             bm = self.block_manager
+            # copy-on-write: any write landing in a block this request
+            # does not exclusively own (prefix-shared) forks it first;
+            # tables are read AFTER prepare_write so they list the forks
+            pairs = []
             if chunk:
                 bm.ensure(chunk.req_id, chunk.start + len(chunk.tokens))
+                pairs += bm.prepare_write(
+                    chunk.req_id, chunk.start,
+                    chunk.start + len(chunk.tokens))
                 cb = bm.padded_table(chunk.req_id, M)
             for i, w in enumerate(decodes):
                 bm.ensure(w.req_id, w.ctx + 1)
+                pairs += bm.prepare_write(w.req_id, w.ctx, w.ctx + 1)
                 db[i] = bm.padded_table(w.req_id, M)
+            if pairs:
+                self._apply_cow(pairs)
 
         return PackedBatch(
             chunk_tokens=jnp.asarray(ct), chunk_slot=jnp.int32(c_slot),
@@ -466,6 +507,12 @@ class Engine:
             decode_tokens=jnp.asarray(dt), decode_slots=jnp.asarray(ds),
             decode_ctx=jnp.asarray(dc), chunk_blocks=jnp.asarray(cb),
             decode_blocks=jnp.asarray(db))
+
+    def _apply_cow(self, pairs: Sequence[tuple]):
+        """Run the copy-on-write block copies on device, before the packed
+        step whose writes they protect."""
+        src, dst = _pad_pairs(pairs)
+        self.cache = self._cow_blocks(self.cache, src, dst)
 
     @staticmethod
     def _collect(chunk: Optional[ChunkWork], decodes: Sequence[DecodeWork],

@@ -41,7 +41,8 @@ import numpy as np
 from repro.cache import BlockManager
 from repro.configs.base import ModelConfig
 from repro.core.engine import (ChunkWork, DecodeWork, Engine, IterationPlan,
-                               KVHandoff, _extract_state, _install_state)
+                               KVHandoff, _extract_state, _install_state,
+                               _pad_pairs)
 from repro.core.sampling import SamplingParams, sample
 
 
@@ -153,6 +154,13 @@ class PipelineEngine(Engine):
     def _seed_memory(self, memory, slot: int):   # pragma: no cover - guarded
         raise NotImplementedError("PipelineEngine does not support "
                                   "frontend-memory architectures yet")
+
+    def _apply_cow(self, pairs: Sequence[tuple]):
+        # one engine-wide block id space; every stage's pool forks the
+        # same (src, dst) pairs on its own cache slice
+        src, dst = _pad_pairs(pairs)
+        self.stage_caches = [self._cow_blocks(c, src, dst)
+                             for c in self.stage_caches]
 
     def extract_request(self, req_id: int) -> KVHandoff:
         """Per-stage extraction reassembled into the MONOLITHIC cache

@@ -3,10 +3,10 @@ from repro.scheduler.policies import (POLICIES, OrcaScheduler,
                                       RequestLevelScheduler, SarathiScheduler,
                                       Scheduler)
 from repro.scheduler.budget import (BUDGETED_POLICIES, CHUNKED_POLICIES,
-                                    SarathiServeScheduler)
+                                    PREFIX_POLICIES, SarathiServeScheduler)
 from repro.scheduler.router import DisaggRouter
 
 __all__ = ["Request", "State", "Scheduler", "SarathiScheduler",
            "OrcaScheduler", "RequestLevelScheduler", "SarathiServeScheduler",
            "POLICIES", "CHUNKED_POLICIES", "BUDGETED_POLICIES",
-           "DisaggRouter"]
+           "PREFIX_POLICIES", "DisaggRouter"]

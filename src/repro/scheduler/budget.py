@@ -34,6 +34,19 @@ With a shared :class:`repro.cache.BlockManager` the policy is additionally
   request is preempted for recompute: blocks freed, request re-queued at
   the head of the waiting line (``Request.preempt``);
 * prefill chunks shrink to the tokens the free list can actually back.
+
+With a :class:`repro.cache.PrefixCache` attached the policy additionally
+reuses KV across requests (**prefix sharing**): admission looks the prompt
+up in the cache, maps the hit blocks into the request's table
+(refcounted), and starts ``prefilled`` at the hit boundary — so only the
+NOVEL tokens are ever charged against the token budget or the free list,
+and the first chunk the engine sees begins where the hit ends.  Written
+prefixes are committed back to the cache at three points where the KV is
+provably on device: at the top of ``next_plan`` (the previous plan has
+fully executed by then, in both the sequential and pipelined serve loops
+— in-flight requests are stripped from ``running`` there), on finish
+(before the blocks are freed), and on preemption (the victim's blocks may
+outlive it in the cache, so a readmission re-hits instead of recomputing).
 """
 from __future__ import annotations
 
@@ -61,6 +74,10 @@ class SarathiServeScheduler(Scheduler):
     admit_backoff:
         Slot-pressure backoff: hold admissions while ``max_decodes``
         requests are already in decode phase.
+    prefix_cache:
+        Optional :class:`repro.cache.PrefixCache` bound to
+        ``block_manager``; enables cross-request KV reuse (see module
+        docstring).  Greedy outputs are bit-identical with and without it.
     """
 
     supports_time = True            # next_plan() accepts now= for gating
@@ -69,7 +86,8 @@ class SarathiServeScheduler(Scheduler):
     def __init__(self, *, n_slots: int, max_decodes: int, chunk_size: int,
                  token_budget: Optional[int] = None,
                  max_chunks_per_iter: Optional[int] = None,
-                 admit_backoff: bool = True, block_manager=None):
+                 admit_backoff: bool = True, block_manager=None,
+                 prefix_cache=None):
         super().__init__(n_slots=n_slots, max_decodes=max_decodes,
                          chunk_size=chunk_size, block_manager=block_manager)
         self.token_budget = int(token_budget if token_budget is not None
@@ -78,6 +96,15 @@ class SarathiServeScheduler(Scheduler):
             raise ValueError("token_budget must be >= 1")
         self.max_chunks_per_iter = max_chunks_per_iter
         self.admit_backoff = admit_backoff
+        if prefix_cache is not None:
+            if block_manager is None:
+                raise ValueError("prefix_cache requires a block_manager")
+            if prefix_cache.bm is not block_manager:
+                raise ValueError("prefix_cache is bound to a different "
+                                 "block pool")
+        self.prefix_cache = prefix_cache
+        self.n_prefix_hits = 0          # admissions that reused >=1 block
+        self.n_cached_tokens = 0        # prefill tokens served from cache
 
     # ------------------------------------------------------------- intake
     def _admit(self, admit_hook=None, now: Optional[float] = None):
@@ -108,22 +135,75 @@ class SarathiServeScheduler(Scheduler):
                     req.state = State.FINISHED
                     self.rejected.append(req)
                     continue
-                if not bm.can_allocate(len(req.prefill_tokens),
-                                       watermark=fresh):
+                # prefix-cache hit: only the NOVEL blocks are charged
+                # against the free list (the hit chain is refcount-shared,
+                # not allocated; a trimmed full-prompt hit costs one extra
+                # block for the copy-on-write fork of its tail)
+                hit_blocks, hit_tokens = [], 0
+                if self.prefix_cache is not None:
+                    hit_blocks, hit_tokens = \
+                        self.prefix_cache.match(req.prefill_tokens)
+                need = bm.blocks_for_tokens(len(req.prefill_tokens)) \
+                    - len(hit_blocks)
+                if hit_tokens < len(hit_blocks) * bm.block_size:
+                    need += 1
+                if not bm.can_allocate_blocks(need, watermark=fresh):
                     break
             self.waiting.popleft()
             req.state = State.PREFILLING
             self.running.append(req)
+            if bm is not None and hit_blocks:
+                bm.share(req.req_id, hit_blocks)
+                req.prefilled = hit_tokens
+                req.cached_tokens += hit_tokens
+                self.n_prefix_hits += 1
+                self.n_cached_tokens += hit_tokens
             if admit_hook:
                 admit_hook(req)
+
+    # ----------------------------------------------------- prefix sharing
+    def _written_tokens(self, req: Request):
+        """The token ids whose KV is PROVABLY in this request's blocks.
+
+        Everything up to ``prefilled`` is written by executed chunks;
+        decode steps write one position each, except the most recently
+        sampled token, which is still pending (its KV lands when the next
+        decode processes it).  ``oip`` discounts post-preemption outputs
+        that re-entered through the prefill path."""
+        oip = len(req.prefill_tokens) - req.prompt_len
+        written = req.prefilled + max(len(req.output) - oip - 1, 0)
+        return (list(req.prefill_tokens[:req.prefilled])
+                + list(req.output[oip:]))[:written]
+
+    def _commit_prefixes(self, reqs):
+        """Index every full written block of ``reqs`` into the prefix
+        cache.  Only called at points where no plan touching these
+        requests is in flight (top of ``next_plan``, finish, preemption),
+        so the written-token prefix is actually on device."""
+        if self.prefix_cache is None:
+            return
+        bm = self.block_manager
+        for r in reqs:
+            toks = self._written_tokens(r)
+            if len(toks) >= bm.block_size:
+                self.prefix_cache.commit(toks, bm.table(r.req_id))
+
+    def _on_finish(self, req: Request):
+        # commit before the base class frees the blocks: cache pins keep
+        # the indexed prefix alive after the owner retires
+        self._commit_prefixes([req])
 
     # --------------------------------------------------------- preemption
     def _preempt(self, victim: Request, preempt_hook=None):
         """Evict ``victim`` for recompute: free its pool blocks, hand it to
         the executor hook (slot release), and re-queue it at the head of
-        the waiting line (it keeps its FCFS arrival priority)."""
+        the waiting line (it keeps its FCFS arrival priority).  With a
+        prefix cache the victim's written full blocks are committed first
+        — they survive the free (cache-pinned), so its readmission
+        re-hits them instead of recomputing from scratch."""
         self.running.remove(victim)
         if self.block_manager is not None:
+            self._commit_prefixes([victim])
             self.block_manager.free(victim.req_id)
         if preempt_hook:
             preempt_hook(victim)
@@ -142,6 +222,11 @@ class SarathiServeScheduler(Scheduler):
     # ------------------------------------------------------------- policy
     def next_plan(self, admit_hook=None, now: Optional[float] = None,
                   preempt_hook=None) -> Optional[IterationPlan]:
+        # the previous plan has fully executed by now (the serve loops
+        # only compose a new plan after results return; pipelined serving
+        # strips in-flight requests from ``running`` first), so every
+        # running request's written prefix is safe to index
+        self._commit_prefixes(self.running)
         self._admit(admit_hook, now)
         if not self.running:
             return None
@@ -218,3 +303,6 @@ CHUNKED_POLICIES = frozenset({"sarathi", "sarathi_serve"})
 
 # policies whose constructor takes a token_budget
 BUDGETED_POLICIES = frozenset({"sarathi_serve"})
+
+# policies whose constructor takes a prefix_cache (cross-request KV reuse)
+PREFIX_POLICIES = frozenset({"sarathi_serve"})

@@ -38,6 +38,7 @@ class Scheduler:
         self.max_decodes = max_decodes
         self.chunk_size = chunk_size
         self.block_manager = block_manager
+        self.prefix_cache = None    # set by prefix-aware policies
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.rejected: List[Request] = []   # unservable at pool geometry
@@ -68,10 +69,15 @@ class Scheduler:
         finished = [r for r in self.running if r.done]
         for r in finished:
             self.running.remove(r)
+            self._on_finish(r)
             if self.block_manager is not None:
                 self.block_manager.free(r.req_id)
             if release_hook:
                 release_hook(r)
+
+    def _on_finish(self, req: Request):
+        """Hook before a finished request's blocks are freed (prefix-aware
+        policies commit its written prefix to the cache here)."""
 
     @property
     def has_work(self) -> bool:

@@ -36,6 +36,10 @@ class Request:
     n_preemptions: int = 0
     recompute_tokens: int = 0                # context re-prefilled overall
 
+    # prefix-cache reuse: prompt tokens whose KV came from shared blocks
+    # instead of prefill compute (cumulative across preemption re-hits)
+    cached_tokens: int = 0
+
     # bookkeeping for metrics
     first_token_iter: Optional[int] = None
     finish_iter: Optional[int] = None

@@ -54,11 +54,20 @@ class DisaggRouter:
         or ``None`` when no replica can currently accept it."""
         if not replicas:
             raise ValueError("no decode replicas")
+        if self.policy == "round_robin":
+            # walk replica IDENTITIES cyclically, skipping non-accepting
+            # ones: indexing a capacity-filtered list with the global
+            # cursor made the rotation depend on who happened to be full,
+            # so a temporarily saturated replica permanently shifted which
+            # peers absorbed the traffic
+            n = len(replicas)
+            for k in range(n):
+                r = replicas[(self._rr_decode + k) % n]
+                if r.can_accept(req):
+                    self._rr_decode = (self._rr_decode + k + 1) % n
+                    return r
+            return None
         ok = [r for r in replicas if r.can_accept(req)]
         if not ok:
             return None
-        if self.policy == "round_robin":
-            r = ok[self._rr_decode % len(ok)]
-            self._rr_decode += 1
-            return r
         return min(ok, key=lambda r: r.decode_load())

@@ -7,7 +7,8 @@ from repro.serving.disagg import (DisaggResult, HandoffRecord, Replica,
 from repro.serving.metrics import (PipelineStats, RequestTrace,
                                    ServingSummary, Stat, format_table,
                                    percentile, summarize)
-from repro.serving.workload import (online_workload, poisson_arrivals,
+from repro.serving.workload import (multiturn_workload, online_workload,
+                                    poisson_arrivals, shared_prefix_workload,
                                     trace_arrivals, uniform_arrivals)
 
 __all__ = [
@@ -20,6 +21,6 @@ __all__ = [
     "PipelineStats",
     "RequestTrace", "ServingSummary", "Stat", "percentile", "summarize",
     "format_table",
-    "online_workload", "poisson_arrivals", "uniform_arrivals",
-    "trace_arrivals",
+    "online_workload", "shared_prefix_workload", "multiturn_workload",
+    "poisson_arrivals", "uniform_arrivals", "trace_arrivals",
 ]

@@ -46,6 +46,8 @@ class RequestTrace:
     token_times: List[float] = field(default_factory=list)
     n_preemptions: int = 0                  # paged-pool evictions suffered
     recompute_tokens: int = 0               # context re-prefilled after them
+    cached_tokens: int = 0                  # prefill tokens reused from the
+    #                                         prefix cache (no compute paid)
 
     def mark_scheduled(self, t: float):
         if self.scheduled is None:
@@ -177,6 +179,9 @@ class ServingSummary:
     n_preemptions: int = 0
     recompute_tokens: int = 0
     peak_pool_util: float = 0.0
+    # prefix-cache reuse (zero when the cache is off)
+    n_prefix_hits: int = 0          # requests that reused >= 1 cached block
+    cached_tokens: int = 0          # prefill tokens served from cache
     # pipeline-parallel stage occupancy (zero for single-stage runs)
     pp: int = 1
     tp: int = 1
@@ -191,6 +196,11 @@ class ServingSummary:
     def recompute_overhead(self) -> float:
         """Re-prefilled tokens per generated token (preemption cost)."""
         return self.recompute_tokens / self.n_tokens if self.n_tokens else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of requests that reused at least one cached block."""
+        return self.n_prefix_hits / self.n_requests if self.n_requests else 0.0
 
 
 def summarize(traces: Iterable[RequestTrace],
@@ -217,6 +227,8 @@ def summarize(traces: Iterable[RequestTrace],
         n_preemptions=sum(t.n_preemptions for t in traces),
         recompute_tokens=sum(t.recompute_tokens for t in traces),
         peak_pool_util=peak_pool_util,
+        n_prefix_hits=sum(1 for t in traces if t.cached_tokens),
+        cached_tokens=sum(t.cached_tokens for t in traces),
         pp=pipeline.pp if pipeline is not None else 1,
         tp=(tp if tp is not None
             else pipeline.tp if pipeline is not None else 1),
@@ -239,6 +251,9 @@ def format_table(s: ServingSummary, unit: str = "s") -> str:
                    f"recompute_tokens={s.recompute_tokens} "
                    f"(overhead {s.recompute_overhead:.2f} tok/tok) "
                    f"peak_pool_util={s.peak_pool_util:.0%}")
+    if s.cached_tokens:
+        out.append(f"prefix_hits={s.n_prefix_hits}/{s.n_requests} "
+                   f"({s.hit_rate:.0%}) cached_tokens={s.cached_tokens}")
     out += [
            f"{'metric':<12s} {'n':>5s} {'mean':>9s} {'p50':>9s} "
            f"{'p90':>9s} {'p99':>9s} {'max':>9s}   [{unit}]"]

@@ -191,6 +191,7 @@ def serve_online(scheduler: Scheduler, executor,
         tr.finish = clock
         tr.n_preemptions = req.n_preemptions
         tr.recompute_tokens = req.recompute_tokens
+        tr.cached_tokens = req.cached_tokens
         result.outputs[req.req_id] = list(req.output)
 
     def preempt(req: Request):
@@ -287,6 +288,7 @@ def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
         tr.finish = drain_clock
         tr.n_preemptions = req.n_preemptions
         tr.recompute_tokens = req.recompute_tokens
+        tr.cached_tokens = req.cached_tokens
         result.outputs[req.req_id] = list(req.output)
 
     def preempt(req: Request):
@@ -388,7 +390,7 @@ class OnlineServer:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0, pp: int = 1, tp: int = 1,
                  devices=None, max_decodes: Optional[int] = None,
-                 force_pipeline: bool = False):
+                 force_pipeline: bool = False, prefix_cache: bool = False):
         from repro.serving.server import build_engine_and_scheduler
         self.cfg = cfg
         self.policy_name = policy
@@ -399,7 +401,7 @@ class OnlineServer:
             seed=seed, policy_kwargs=policy_kwargs, paged=paged,
             block_size=block_size, n_blocks=n_blocks, watermark=watermark,
             pp=pp, tp=tp, devices=devices, max_decodes=max_decodes,
-            force_pipeline=force_pipeline)
+            force_pipeline=force_pipeline, prefix_cache=prefix_cache)
         self.executor = EngineExecutor(self.engine)
 
     def run(self, requests: Sequence[Request], *, warmup: bool = True,

@@ -16,8 +16,8 @@ from repro.configs.base import ModelConfig
 from repro.core.engine import Engine
 from repro.core.pipeline_engine import PipelineEngine
 from repro.core.sampling import SamplingParams
-from repro.scheduler import (BUDGETED_POLICIES, CHUNKED_POLICIES, POLICIES,
-                             Request)
+from repro.scheduler import (BUDGETED_POLICIES, CHUNKED_POLICIES,
+                             PREFIX_POLICIES, POLICIES, Request)
 
 
 def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
@@ -33,7 +33,8 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                watermark: float = 0.0, pp: int = 1,
                                tp: int = 1, devices=None,
                                max_decodes: Optional[int] = None,
-                               force_pipeline: bool = False):
+                               force_pipeline: bool = False,
+                               prefix_cache: bool = False):
     """Shared construction for the offline Server and OnlineServer.
 
     Orca / request-level submit whole prompts as one 'chunk', so their
@@ -63,6 +64,16 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     pipelined serving loop then measures per-stage durations, which is
     how ``benchmarks/pipeline.py --pp 1`` produces the no-pipeline
     reference column for its bubble numbers.
+
+    ``prefix_cache=True`` attaches a :class:`repro.cache.PrefixCache` to
+    the shared pool so the scheduler reuses KV across requests with the
+    same prompt prefix (admission charges only the novel tokens; the
+    engine copy-on-write-forks shared blocks before writing).  Requires
+    ``paged=True``, a prefix-aware policy, and a full-attention
+    architecture: layer kinds with slot-indexed sequence state (sliding
+    windows, recurrent SSM/LRU state, cross KV) carry history the block
+    pool cannot share, so reuse there would be silently wrong.  Greedy
+    outputs are bit-identical with the cache on vs off.
 
     ``max_decodes`` caps the decodes the SCHEDULER piggybacks per
     iteration (default: every decoding request, ``n_slots - 1``).  With a
@@ -94,6 +105,23 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
         # the scheduler gates admission / reserves / preempts against the
         # SAME free list the engine allocates from
         kw["block_manager"] = engine.block_manager
+    if prefix_cache:
+        if policy not in PREFIX_POLICIES:
+            raise ValueError(f"prefix_cache is only supported by "
+                             f"{sorted(PREFIX_POLICIES)}, not {policy!r}")
+        if engine.block_manager is None:
+            raise ValueError("prefix_cache requires paged=True")
+        from repro.cache import PrefixCache
+        from repro.models import stack
+        group_kinds, _, tail_kinds = stack.group_split(cfg)
+        bad = [k for k in (*group_kinds, *tail_kinds)
+               if k not in ("dense", "moe")]
+        if bad:
+            raise ValueError(
+                f"prefix_cache requires pure paged-attention layers; "
+                f"{cfg.name} has slot-state kinds {sorted(set(bad))} whose "
+                f"per-request history the block pool cannot share")
+        kw["prefix_cache"] = PrefixCache(engine.block_manager)
     if token_budget is not None:
         if policy not in BUDGETED_POLICIES:
             raise ValueError(f"token_budget is only supported by "
@@ -139,7 +167,8 @@ class Server:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None, watermark: float = 0.0,
-                 pp: int = 1, tp: int = 1, devices=None):
+                 pp: int = 1, tp: int = 1, devices=None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.policy_name = policy
         self.engine, self.scheduler = build_engine_and_scheduler(
@@ -148,7 +177,7 @@ class Server:
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, paged=paged, block_size=block_size,
             n_blocks=n_blocks, watermark=watermark, pp=pp, tp=tp,
-            devices=devices)
+            devices=devices, prefix_cache=prefix_cache)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 100_000) -> ServeResult:

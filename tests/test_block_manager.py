@@ -114,6 +114,29 @@ def test_ensure_is_idempotent_and_exhaustion_raises():
     assert bm.can_append(0, 4)                  # already covered
 
 
+def test_failed_ensure_leaves_no_stale_table():
+    """A PoolExhausted raise for a NEW request must not leave an empty
+    ``_tables`` entry behind (regression: ``ensure`` used to ``setdefault``
+    the table before checking the free list — harmless for the free-list
+    era, refcount corruption once blocks are shared)."""
+    bm = BlockManager(4, 2)                     # 3 usable blocks
+    bm.ensure(0, 5)                             # all 3 taken
+    with pytest.raises(PoolExhausted):
+        bm.ensure(1, 2)
+    assert bm.table(1) == []                    # no stale entry
+    assert bm.free(1) == 0                      # nothing to free
+    assert bm.n_free + bm.n_referenced == bm.n_usable
+    # an EXISTING request that fails to grow keeps its allocation intact
+    held = bm.free(0)
+    assert held == 3
+    bm.ensure(2, 4)                             # 2 blocks
+    t = bm.table(2)
+    with pytest.raises(PoolExhausted):
+        bm.ensure(2, 8)                         # needs 2 more, 1 free
+    assert bm.table(2) == t
+    assert bm.free(2) == 2
+
+
 def test_constructor_validation():
     with pytest.raises(ValueError):
         BlockManager(1, 4)

@@ -259,6 +259,27 @@ def test_router_round_robin_cycles():
     assert [r.pick_decode([a, b], None) for _ in range(3)] == [a, b, a]
 
 
+def test_router_round_robin_stable_under_capacity_filtering():
+    """Rotation walks replica IDENTITIES: a temporarily full replica is
+    skipped without shifting which peers absorb the rest of the cycle
+    (regression: the cursor used to index the capacity-FILTERED list, so
+    who got a handoff depended on who happened to be full that instant)."""
+    r = DisaggRouter("round_robin")
+    a, b, c = _Stub("a"), _Stub("b"), _Stub("c")
+    reps = [a, b, c]
+    b._a = False
+    # b full: the cycle covers the accepting replicas evenly, in order
+    assert [r.pick_decode(reps, None) for _ in range(4)] == [a, c, a, c]
+    # b recovers mid-rotation: it rejoins exactly at its place in the ring
+    b._a = True
+    assert [r.pick_decode(reps, None) for _ in range(3)] == [a, b, c]
+    # everyone full -> None, and the cursor does not spin
+    a._a = b._a = c._a = False
+    assert r.pick_decode(reps, None) is None
+    a._a = b._a = c._a = True
+    assert r.pick_decode(reps, None) is a
+
+
 def test_router_unknown_policy_rejected():
     with pytest.raises(ValueError, match="unknown router policy"):
         DisaggRouter("hash")

@@ -1,0 +1,301 @@
+"""Prefix sharing: refcount / copy-on-write invariants (property suite),
+LRU eviction safety, prefix-aware scheduling, and the house guarantee —
+greedy outputs bit-identical with the prefix cache on vs off."""
+import numpy as np
+import pytest
+
+from _prop import given, settings, strategies as st
+from conftest import cached_model
+from repro.cache import BlockManager, PrefixCache
+from repro.scheduler import Request, SarathiServeScheduler
+from repro.serving import (CostModelExecutor, OnlineServer,
+                           multiturn_workload, online_workload,
+                           poisson_arrivals, serve_online,
+                           shared_prefix_workload)
+from repro.sim.hardware import A100
+
+
+# ---------------------------------------------------------------- units
+def test_match_commit_evict_round_trip():
+    bm = BlockManager(8, 2)
+    pc = PrefixCache(bm)
+    toks = [1, 2, 3, 4, 5, 6]
+    bm.ensure(0, 6)
+    pc.commit(toks, bm.table(0))
+    assert len(pc) == 3
+    # longest-prefix match over full blocks, stopping at the first miss
+    blocks, n = pc.match(toks + [7])
+    assert n == 6 and blocks == bm.table(0)
+    blocks, n = pc.match([1, 2, 9, 9, 9, 9])
+    assert n == 2 and len(blocks) == 1
+    blocks, n = pc.match([9] * 6)
+    assert (blocks, n) == ([], 0)
+    # a full-prompt hit is trimmed: >= 1 token always remains to process
+    blocks, n = pc.match(toks)
+    assert n == 5 and len(blocks) == 3
+
+
+def test_fork_then_free_returns_every_block_exactly_once():
+    bm = BlockManager(10, 2)
+    pc = PrefixCache(bm)
+    toks = list(range(6))
+    bm.ensure(0, 6)
+    pc.commit(toks, bm.table(0))
+    b0 = bm.table(0)
+    blocks, hit = pc.match(toks)               # trimmed full-prompt hit
+    assert hit == 5
+    bm.share(1, blocks)
+    assert bm.refcount(blocks[0]) == 3         # owner + cache + sharer
+    pairs = bm.prepare_write(1, hit, 6)        # tail write -> CoW fork
+    assert len(pairs) == 1 and pairs[0][0] == b0[2]
+    dst = pairs[0][1]
+    assert bm.table(1) == [b0[0], b0[1], dst]
+    assert bm.prepare_write(1, hit, 6) == []   # now exclusive: no re-fork
+    # frees only return a block on its LAST reference, exactly once
+    assert bm.free(0) == 0                     # all three still cache-pinned
+    assert bm.free(1) == 1                     # only the private fork
+    assert pc.n_evictable == 3
+    assert pc.evict(99) == 3
+    assert bm.n_free == bm.n_usable and bm.n_referenced == 0
+
+
+def test_eviction_is_lru_and_match_touches():
+    bm = BlockManager(12, 2)
+    pc = PrefixCache(bm)
+    a, b = [1, 1, 1, 1], [2, 2, 2, 2]
+    bm.ensure(0, 4)
+    pc.commit(a, bm.table(0))
+    bm.free(0)
+    bm.ensure(1, 4)
+    pc.commit(b, bm.table(1))
+    bm.free(1)
+    pc.match(a + [9])                          # LRU-touch a's chain
+    assert pc.evict(1) == 1                    # drops b's oldest block
+    _, n = pc.match(a + [9])
+    assert n == 4                              # a survives intact
+    _, n = pc.match(b + [9])
+    assert n == 0                              # b's chain broke at block 0
+
+
+def test_share_requires_empty_table_and_allocated_blocks():
+    bm = BlockManager(8, 2)
+    bm.ensure(0, 2)
+    with pytest.raises(ValueError, match="sharing must come first"):
+        bm.share(0, [])
+    with pytest.raises(ValueError, match="not allocated"):
+        bm.incref(5)
+
+
+# ------------------------------------------------------- property suite
+@given(n_blocks=st.integers(min_value=4, max_value=48),
+       block_size=st.integers(min_value=1, max_value=8),
+       script=st.lists(st.integers(min_value=0, max_value=9999),
+                       min_size=4, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_refcount_conservation_under_random_lifecycle(n_blocks, block_size,
+                                                      script):
+    """Random admit(match+share)/commit/free/evict interleavings keep the
+    pool's books consistent: ``n_free + n_referenced == n_usable`` after
+    every operation, eviction never reclaims a block referenced by a live
+    table, double-free is a no-op, and once everything is released every
+    physical block is back on the free list exactly once."""
+    bm = BlockManager(n_blocks, block_size)
+    pc = PrefixCache(bm)
+    live = {}
+    next_id = 0
+    for op in script:
+        kind = op % 4
+        if kind in (0, 1):      # admit: small alphabet -> frequent hits
+            length = 1 + (op // 4) % (3 * block_size + 2)
+            toks = [((op // 7) + i) % 5 for i in range(length)]
+            blocks, hit = pc.match(toks)
+            need = bm.blocks_for_tokens(length) - len(blocks)
+            if hit < len(blocks) * block_size:
+                need += 1       # CoW fork of the trimmed tail
+            if not bm.can_allocate_blocks(need, watermark=False):
+                continue
+            rid, next_id = next_id, next_id + 1
+            bm.share(rid, blocks)
+            bm.ensure(rid, length)
+            bm.prepare_write(rid, hit, length)   # what the engine forks
+            live[rid] = toks
+        elif kind == 2 and live:                 # commit + retire one
+            rid = sorted(live)[op % len(live)]
+            toks = live.pop(rid)
+            pc.commit(toks, bm.table(rid))
+            bm.free(rid)
+            assert bm.free(rid) == 0             # idempotent double-free
+        elif kind == 3:                          # pool pressure
+            pc.evict(1 + op % 3)
+        assert bm.n_free + bm.n_referenced == bm.n_usable
+        for rid in live:                         # eviction safety
+            for b in bm.table(rid):
+                assert bm.refcount(b) >= 1
+                assert b != bm.scratch_block
+    for rid in list(live):
+        bm.free(rid)
+    pc.evict(len(pc) + 1)                        # everything is evictable now
+    assert pc.n_evictable == 0 and len(pc) == 0
+    assert bm.n_referenced == 0
+    assert bm.n_free == bm.n_usable
+    assert len(set(bm._free)) == bm.n_usable     # each block back ONCE
+
+
+# ------------------------------------------- scheduler-level accounting
+def _cost_model_run(cfg, prefix, *, n_blocks=129, n_requests=8):
+    bm = BlockManager(n_blocks, 8)
+    pc = PrefixCache(bm) if prefix else None
+    sched = SarathiServeScheduler(n_slots=4, max_decodes=3, chunk_size=8,
+                                  token_budget=16, block_manager=bm,
+                                  prefix_cache=pc)
+    reqs = shared_prefix_workload(n_requests, shared_len=24, unique_len=8,
+                                  n_decode=4, n_groups=1, rate=2.0,
+                                  vocab_size=cfg.vocab_size, seed=9)
+    res = serve_online(sched, CostModelExecutor(cfg, A100), reqs)
+    return res, sched, bm, pc
+
+
+def test_prefix_hits_charge_only_novel_tokens():
+    """Admission starts ``prefilled`` at the hit boundary, so the prefill
+    tokens actually scheduled shrink by EXACTLY the cached tokens (cost
+    model: pure scheduler bookkeeping, no engine)."""
+    cfg, _, _ = cached_model("tinyllama-1.1b")
+    off, _, _, _ = _cost_model_run(cfg, False)
+    on, sched, bm, pc = _cost_model_run(cfg, True)
+    off_prefill = sum(i.n_prefill_tokens for i in off.iterations)
+    on_prefill = sum(i.n_prefill_tokens for i in on.iterations)
+    assert sched.n_cached_tokens > 0
+    assert sched.n_prefix_hits > 0
+    assert on_prefill == off_prefill - sched.n_cached_tokens
+    # every request still decodes to completion either way
+    assert all(len(o) == 4 for o in on.outputs.values())
+    assert all(len(o) == 4 for o in off.outputs.values())
+    # the summary surfaces the reuse counters
+    s = on.summary()
+    assert s.cached_tokens == sched.n_cached_tokens
+    assert s.n_prefix_hits == sched.n_prefix_hits
+    # after the run only cache pins remain
+    assert bm.n_referenced == len(pc)
+    assert pc.n_evictable == len(pc)
+
+
+def test_preemption_with_prefix_cache_conserves_pool():
+    """A pool small enough to force preemptions under the shared-prefix
+    workload still completes, and the books stay balanced (committed
+    blocks survive the victim's free and get re-hit on readmission)."""
+    cfg, _, _ = cached_model("tinyllama-1.1b")
+    res, sched, bm, pc = _cost_model_run(cfg, True, n_blocks=13)
+    assert all(len(o) == 4 for o in res.outputs.values())
+    assert bm.n_free + bm.n_referenced == bm.n_usable
+    assert bm.n_referenced == len(pc)
+
+
+# -------------------------------------------------- workload generators
+def test_shared_prefix_workload_shapes():
+    reqs = shared_prefix_workload(8, shared_len=16, unique_len=4,
+                                  n_decode=3, n_groups=2, seed=0)
+    assert len(reqs) == 8
+    g0 = [r for i, r in enumerate(reqs) if i % 2 == 0]
+    g1 = [r for i, r in enumerate(reqs) if i % 2 == 1]
+    for g in (g0, g1):
+        assert all(len(r.prompt) == 20 for r in g)
+        assert all(r.prompt[:16] == g[0].prompt[:16] for r in g)
+    assert g0[0].prompt[:16] != g1[0].prompt[:16]
+    tails = [tuple(r.prompt[16:]) for r in reqs]
+    assert len(set(tails)) == len(tails)          # unique suffixes
+    times = [r.arrival_time for r in reqs]
+    assert times == sorted(times) and times[0] > 0
+    with pytest.raises(ValueError):
+        shared_prefix_workload(2, shared_len=0, unique_len=0)
+
+
+def test_multiturn_workload_grows_strict_prefixes():
+    reqs = multiturn_workload(2, 3, turn_len=4, n_decode=2, turn_gap=10.0,
+                              rate=1.0, seed=1)
+    assert len(reqs) == 6
+    firsts = [r for r in reqs if len(r.prompt) == 4]
+    assert len(firsts) == 2
+    for first in firsts:
+        chain = sorted((r for r in reqs if r.prompt[:4] == first.prompt),
+                       key=lambda r: len(r.prompt))
+        assert [len(r.prompt) for r in chain] == [4, 8, 12]
+        for a, b in zip(chain, chain[1:]):
+            assert b.prompt[:len(a.prompt)] == a.prompt   # strict prefix
+            assert b.arrival_time == pytest.approx(a.arrival_time + 10.0)
+    assert [r.arrival_time for r in reqs] == \
+        sorted(r.arrival_time for r in reqs)
+
+
+def test_online_workload_arrivals_use_independent_substream():
+    """Regression: ``online_workload`` fed the same raw seed to the
+    arrival process and the shape sampler, correlating the two streams.
+    Arrivals now come from a spawned substream; shapes stay pinned to the
+    raw seed (committed baselines rely on the shapes)."""
+    from repro.data import serving_workload
+    reqs = online_workload(16, rate=2.0, seed=5)
+    correlated = poisson_arrivals(16, 2.0, seed=5)      # the old stream
+    got = np.array([r.arrival_time for r in reqs])
+    assert not np.allclose(got, correlated)
+    shapes = serving_workload(16, pd_ratio=8.0, min_len=16, max_len=64,
+                              theta=0.4, seed=5, vocab_size=32000)
+    assert [list(r.prompt) for r in reqs] == [list(p) for p, _ in shapes]
+    again = online_workload(16, rate=2.0, seed=5)       # deterministic
+    assert [r.arrival_time for r in again] == list(got)
+
+
+# -------------------------------------------------- the house invariant
+def _engine_run(cfg, params, reqs, *, prefix_cache, force_pipeline=False):
+    srv = OnlineServer(cfg, params, chunk_size=8, n_slots=3, max_len=256,
+                       max_prompt_len=64, paged=True, block_size=8,
+                       prefix_cache=prefix_cache,
+                       force_pipeline=force_pipeline)
+    return srv.run(reqs), srv
+
+
+def test_greedy_bit_identity_prefix_cache_on_off():
+    """The acceptance invariant: greedy token streams are bit-identical
+    with the prefix cache enabled vs disabled — on the sequential loop AND
+    the pipelined loop — while the enabled run actually reuses blocks."""
+    cfg, _, params = cached_model("tinyllama-1.1b")
+
+    def mk():
+        return shared_prefix_workload(6, shared_len=24, unique_len=8,
+                                      n_decode=4, n_groups=2, rate=5.0,
+                                      vocab_size=cfg.vocab_size, seed=3)
+
+    off_reqs, on_reqs, pl_reqs = mk(), mk(), mk()
+    off, _ = _engine_run(cfg, params, off_reqs, prefix_cache=False)
+    on, on_srv = _engine_run(cfg, params, on_reqs, prefix_cache=True)
+    pl, pl_srv = _engine_run(cfg, params, pl_reqs, prefix_cache=True,
+                             force_pipeline=True)
+    for a, b, c in zip(off_reqs, on_reqs, pl_reqs):
+        assert on.outputs[b.req_id] == off.outputs[a.req_id]
+        assert pl.outputs[c.req_id] == off.outputs[a.req_id]
+    # the cache really was exercised (later group members reuse blocks)
+    assert on_srv.scheduler.n_cached_tokens > 0
+    assert on.summary().cached_tokens == on_srv.scheduler.n_cached_tokens
+    assert pl_srv.scheduler.n_cached_tokens > 0
+
+
+def test_identical_prompt_trimmed_hit_is_bit_identical():
+    """Re-submitting an IDENTICAL prompt takes the trimmed full-prompt
+    hit (all but one token cached, tail block forked copy-on-write) and
+    still reproduces the cache-off tokens bit-for-bit."""
+    cfg, _, params = cached_model("tinyllama-1.1b")
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 16).tolist()
+
+    def mk():
+        return [Request(prompt=list(prompt), max_new_tokens=4,
+                        arrival_time=t) for t in (0.0, 50.0)]
+
+    off_reqs, on_reqs = mk(), mk()
+    off, _ = _engine_run(cfg, params, off_reqs, prefix_cache=False)
+    on, srv = _engine_run(cfg, params, on_reqs, prefix_cache=True)
+    for a, b in zip(off_reqs, on_reqs):
+        assert on.outputs[b.req_id] == off.outputs[a.req_id]
+    # greedy + identical prompt => identical outputs across the two
+    assert on.outputs[on_reqs[0].req_id] == on.outputs[on_reqs[1].req_id]
+    # the second request reused every full block (len-1 tokens, trimmed)
+    assert on_reqs[1].cached_tokens == len(prompt) - 1
+    assert srv.scheduler.n_prefix_hits == 1
