@@ -43,8 +43,10 @@ import sys
 
 BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 
-# benches whose rows come from the deterministic cost model
-GATED_BENCHES = {"latency_sweep", "memory_sweep"}
+# benches whose rows come from deterministic models (serving cost model;
+# the roofline paged-kernel bandwidth table) — machine-independent, so a
+# metric drop is a real regression
+GATED_BENCHES = {"latency_sweep", "memory_sweep", "roofline_kernels"}
 # wall-clock benches whose numbers are machine-dependent: only their sweep
 # SHAPE is pinned — the listed identity fields per row must match the
 # baseline exactly (a changed grid means the baseline needs --update), but

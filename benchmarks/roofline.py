@@ -18,6 +18,13 @@ corrections applied and recorded:
 
 MODEL_FLOPS = 6·N·D (training) / 2·N·D (inference fwd) with N = active
 params; the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+
+The module also carries the PAGED-KERNEL bandwidth table (``python -m
+benchmarks.roofline``): an analytical achieved-vs-peak HBM bandwidth
+model for the paged attention kernel variants (split vs fused pool
+layout x single vs multi-buffered DMA), emitted as the deterministic
+``BENCH_roofline_kernels.json`` artifact and gated by
+check_regression.py.  See :func:`kernel_variant_rows`.
 """
 from __future__ import annotations
 
@@ -105,3 +112,113 @@ def rows_to_csv(rows: List[Dict]) -> List[str]:
             f"m={r['memory_s'] * 1e3:.3f}ms;x={r['collective_s'] * 1e3:.3f}ms;"
             f"useful={r['useful_flops_ratio']:.2f}")
     return out
+
+
+# --------------------------------------------------------------------------
+# Paged-attention kernel variants: achieved vs model HBM bandwidth
+# --------------------------------------------------------------------------
+# Fixed decode/prefill geometry for the table — one representative serving
+# point (per layer, per step).  Constants, not knobs: the artifact must be
+# byte-stable so check_regression can gate it.
+KERNEL_GEOM = dict(
+    batch=8,          # decode sequences / packed prefill rows in flight
+    chunk=256,        # prefill chunk tokens (SARATHI chunked prefill)
+    n_q_heads=16, n_kv_heads=4, head_dim=128,
+    block_size=16, pages_per_seq=64,          # ctx = 1024 tokens
+    dtype_bytes=2,                            # bf16 pools
+)
+# Latency-equivalent cost of issuing ONE block-table DMA descriptor,
+# expressed in HBM bytes (descriptor setup + first-beat latency at ~1
+# GHz x ~1 TB/s).  The split pool pays this PER K AND PER V fetch; the
+# fused pool's channel-pair rows pay it once.
+DMA_OVERHEAD_BYTES = 1024
+
+
+def _kernel_variant_row(kernel: str, layout: str, buffering: str) -> Dict:
+    g = KERNEL_GEOM
+    hw = TPU_V5E
+    n_rows = g["batch"] * g["n_kv_heads"] * g["pages_per_seq"]
+    # useful traffic: every variant reads the SAME K+V payload (+ q in,
+    # o out) — layouts change descriptor count, not payload
+    kv_payload = (n_rows * g["block_size"] * 2 * g["head_dim"]
+                  * g["dtype_bytes"])
+    q_tokens = g["batch"] if kernel == "decode" else g["chunk"]
+    qo_payload = 2 * q_tokens * g["n_q_heads"] * g["head_dim"] \
+        * g["dtype_bytes"]
+    payload = kv_payload + qo_payload
+    # descriptor count: split issues separate K and V copies per
+    # (seq/row, kv head, page); fused fetches the interleaved pair once
+    n_dma = n_rows * (2 if layout == "split" else 1)
+    modeled_bytes = payload + n_dma * DMA_OVERHEAD_BYTES
+    # time: DMA stream vs flash compute; multi-buffering overlaps them
+    # behind a one-page pipeline fill, single-buffering serialises
+    flops = 4.0 * q_tokens * g["n_q_heads"] * g["pages_per_seq"] \
+        * g["block_size"] * g["head_dim"]
+    if kernel == "prefill":
+        flops *= 0.5                          # causal: ~half the scores
+    t_dma = modeled_bytes / hw.hbm_bw
+    t_compute = flops / hw.peak_flops
+    if buffering == "multi":
+        # overlap, paid for by one pipeline-fill page fetch up front
+        page_bytes = (g["block_size"] * 2 * g["head_dim"]
+                      * g["dtype_bytes"]
+                      + (2 if layout == "split" else 1)
+                      * DMA_OVERHEAD_BYTES)
+        t_total = max(t_dma, t_compute) + page_bytes / hw.hbm_bw
+    else:
+        t_total = t_dma + t_compute
+    achieved_bw = payload / t_total
+    return {
+        "kernel": kernel, "layout": layout, "buffering": buffering,
+        "payload_bytes": payload, "modeled_bytes": modeled_bytes,
+        "n_dma": n_dma,
+        "model_bw_gbs": hw.hbm_bw / 1e9,
+        "throughput": achieved_bw / 1e9,      # achieved GB/s (gated)
+        "bw_fraction": achieved_bw / hw.hbm_bw,
+    }
+
+
+def kernel_variant_rows() -> List[Dict]:
+    """The (kernel x layout x buffering) bandwidth table.  Two invariants
+    are asserted here because the artifact gates on them implicitly:
+    the fused layout strictly reduces modeled HBM bytes per step (half
+    the DMA descriptors for the same payload), and multi-buffering never
+    slows a variant down."""
+    rows = [_kernel_variant_row(k, lo, bu)
+            for k in ("decode", "prefill")
+            for lo in ("split", "fused")
+            for bu in ("single", "multi")]
+    by = {(r["kernel"], r["layout"], r["buffering"]): r for r in rows}
+    for k in ("decode", "prefill"):
+        for bu in ("single", "multi"):
+            assert (by[(k, "fused", bu)]["modeled_bytes"]
+                    < by[(k, "split", bu)]["modeled_bytes"]), \
+                f"fused must reduce modeled bytes ({k}/{bu})"
+        for lo in ("split", "fused"):
+            assert (by[(k, lo, "multi")]["throughput"]
+                    >= by[(k, lo, "single")]["throughput"]), \
+                f"multi-buffering must not regress bandwidth ({k}/{lo})"
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="emit the paged-kernel bandwidth table "
+                    "(BENCH_roofline_kernels.json)")
+    ap.add_argument("--out", default="BENCH_roofline_kernels.json")
+    args = ap.parse_args(argv)
+    rows = kernel_variant_rows()
+    for r in rows:
+        print(f"{r['kernel']:8s} {r['layout']:6s} {r['buffering']:7s} "
+              f"bytes={r['modeled_bytes']:>9d} dma={r['n_dma']:>5d} "
+              f"achieved={r['throughput']:7.1f} GB/s "
+              f"({r['bw_fraction']:.0%} of model bw)")
+    pathlib.Path(args.out).write_text(
+        json.dumps({"bench": "roofline_kernels", "rows": rows}, indent=1))
+    print(f"wrote {args.out} ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -57,13 +57,13 @@ from repro.models.registry import Model
 # block-indexed, not slot-indexed: nothing to wipe on slot reuse — freed
 # blocks self-heal exactly like dense KV rows (overwritten before visible,
 # or hidden by the context mask)
-_POOL_KEYS = frozenset({"pk", "pv"})
+_POOL_KEYS = frozenset({"pkv"})
 
 
 def _leaf_kind(path):
     """-> (lead, is_pool) for a cache-tree leaf path: ``lead`` is 1 when
     the leaf carries the scanned-group leading axis, and pool leaves are
-    the block-indexed paged KV (``pk``/``pv``)."""
+    the block-indexed fused paged KV (``pkv``)."""
     keys = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
     lead = 1 if "groups" in keys else 0
     return lead, bool(keys and keys[-1] in _POOL_KEYS)
@@ -280,7 +280,7 @@ class Engine:
         self.tp = int(tp)
         if self.tp > 1:
             from repro import sharding as shd
-            shd.check_tp_supported(self.tp, self.paged)
+            shd.check_tp_supported(self.tp, self.paged, cfg)
             self.tp_mesh = shd.make_tp_mesh(self.tp, devices)
             self.params = shd.shard_params(cfg, self.params, self.tp_mesh)
             self.cache = shd.shard_cache(cfg, self.cache, self.tp_mesh)
@@ -531,6 +531,12 @@ class Engine:
                         pad_chunk: bool = False) -> Dict[int, int]:
         pk = self._pack(chunk, decodes, pad_chunk)
         self._key, sub = jax.random.split(self._key)
+        if self.paged:
+            # trace-time hint: a tp>1 mesh makes the pallas backend wrap
+            # its kernel calls in shard_map over the kv-head axis (reset
+            # per call so engines never see another engine's stale mesh)
+            from repro.models import blocks as bk
+            bk.set_paged_attn_mesh(self.tp_mesh)
         chunk_tok, dec_tok, self.cache = self._step(
             self.params, pk, self.cache, sub)
         self.iterations += 1

@@ -86,7 +86,7 @@ class PipelineEngine(Engine):
         stage_caches = pl.stage_cache(cfg, self.cache, self.pp)
         if self.tp > 1:
             from repro import sharding as shd
-            shd.check_tp_supported(self.tp, self.paged)
+            shd.check_tp_supported(self.tp, self.paged, cfg)
             # stage s = row s of the (pp, tp) pipeline mesh; each row is a
             # (1, tp) ("data", "model") submesh the shared policy shards
             # the stage's param/cache slices over
@@ -212,6 +212,12 @@ class PipelineEngine(Engine):
         x = self._x0
         for s, fn in enumerate(self._stage_fns):
             last = s == self.pp - 1
+            if self.paged:
+                # per-stage trace-time mesh hint for the paged pallas
+                # backend (each stage jits against its own (1, tp) row)
+                from repro.models import blocks as bk
+                bk.set_paged_attn_mesh(
+                    self.stage_meshes[s] if self.stage_meshes else None)
             t0 = time.perf_counter()
             # the activation hop onto this stage's device(s) is part of the
             # stage's measured time (it IS the P2P transfer); with tp > 1

@@ -8,15 +8,66 @@ own masking and block-fetch logic.
 On a TPU backend the kernels compile natively; everywhere else they run in
 ``interpret=True`` mode (the kernel body executed op-by-op on CPU), which is
 how this container validates them against the ``ref.py`` oracles.
+``REPRO_PALLAS_INTERPRET=0|1`` overrides that platform default either way.
+
+The fused-paged kernels' tile knobs are env-tunable:
+
+* ``REPRO_PAGED_KV_PAGES`` — physical KV blocks fetched + folded per grid
+  step (default 1: one page per step);
+* ``REPRO_PAGED_KV_BUFFERS`` — VMEM ring slots for the KV page DMAs
+  (1 = serial fetch->compute, default 2 = double-buffered, 4 = quad);
+* ``REPRO_PAGED_Q_BLOCK`` — query-tile rows for the chunked-prefill
+  kernel (default 128; clamped/validated against the chunk length).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 NEG = -1e30
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def resolve_interpret() -> bool:
+    """Interpret-vs-compile for the Pallas kernels: compiled natively on a
+    TPU backend, interpreted elsewhere (CPU CI), with
+    ``REPRO_PALLAS_INTERPRET=0|1`` forcing either mode."""
+    v = os.environ.get("REPRO_PALLAS_INTERPRET", "auto")
+    if v in ("0", "false"):
+        return False
+    if v in ("1", "true"):
+        return True
+    if v != "auto":
+        raise ValueError(f"REPRO_PALLAS_INTERPRET={v!r}: use 0, 1 or auto")
+    return not _on_tpu()
+
+
+def _env_pos_int(name: str, default: int) -> int:
+    v = int(os.environ.get(name, default))
+    if v < 1:
+        raise ValueError(f"{name}={v}: must be >= 1")
+    return v
+
+
+def paged_kv_pages() -> int:
+    return _env_pos_int("REPRO_PAGED_KV_PAGES", 1)
+
+
+def paged_n_buffers() -> int:
+    return _env_pos_int("REPRO_PAGED_KV_BUFFERS", 2)
+
+
+def paged_q_block() -> int:
+    return _env_pos_int("REPRO_PAGED_Q_BLOCK", 128)
 
 
 # --------------------------------------------------------------------------
@@ -72,35 +123,31 @@ from repro.kernels import paged_chunked_prefill_attention as _pcpa  # noqa: E402
 from repro.kernels import paged_decode_attention as _pda     # noqa: E402
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
-
-
 @functools.partial(jax.jit, static_argnames=("bq", "bk"))
 def chunked_prefill_attention(q, k, v, start, *, bq: int = 128,
                               bk: int = 128):
     return _cpa.chunked_prefill_attention(
-        q, k, v, start, bq=bq, bk=bk, interpret=not _on_tpu())
+        q, k, v, start, bq=bq, bk=bk, interpret=resolve_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("bk",))
 def decode_attention(q, k, v, ctx, *, bk: int = 128):
     return _da.decode_attention(q, k, v, ctx, bk=bk,
-                                interpret=not _on_tpu())
+                                interpret=resolve_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("bq",))
-def paged_chunked_prefill_attention(q, pool_k, pool_v, block_table, start,
-                                    *, bq: int = 128):
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "kv_pages", "n_buffers"))
+def paged_chunked_prefill_attention(q, pool_kv, block_table, start, *,
+                                    bq=None, kv_pages=None, n_buffers=None):
     return _pcpa.paged_chunked_prefill_attention(
-        q, pool_k, pool_v, block_table, start, bq=bq,
-        interpret=not _on_tpu())
+        q, pool_kv, block_table, start, bq=bq, kv_pages=kv_pages,
+        n_buffers=n_buffers, interpret=resolve_interpret())
 
 
-@jax.jit
-def paged_decode_attention(q, pool_k, pool_v, block_tables, ctx):
-    return _pda.paged_decode_attention(q, pool_k, pool_v, block_tables, ctx,
-                                       interpret=not _on_tpu())
+@functools.partial(jax.jit, static_argnames=("kv_pages", "n_buffers"))
+def paged_decode_attention(q, pool_kv, block_tables, ctx, *,
+                           kv_pages=None, n_buffers=None):
+    return _pda.paged_decode_attention(
+        q, pool_kv, block_tables, ctx, kv_pages=kv_pages,
+        n_buffers=n_buffers, interpret=resolve_interpret())

@@ -24,23 +24,30 @@ def decode_attention_ref(q, k, v, ctx):
 
 
 def gather_paged_rows(pool, block_tables):
-    """Reconstruct dense cache rows from a paged pool: pool [N, bs, nk, hd],
-    block_tables [..., M] -> [..., M * bs, nk, hd] (logical position order).
+    """Reconstruct dense cache rows from a paged pool: pool [N, bs, ch, hd],
+    block_tables [..., M] -> [..., M * bs, ch, hd] (logical position order).
     This is the oracle's view of block-table indirection — the paged
     kernels must behave as if attending these gathered rows."""
     return cm.gather_block_rows(pool, block_tables)
 
 
-def paged_chunked_prefill_attention_ref(q, pool_k, pool_v, block_table,
-                                        start):
-    """q [C, nq, hd]; pools [N, bs, nk, hd]; block_table [M]; start scalar."""
-    return chunked_prefill_attention_ref(
-        q, gather_paged_rows(pool_k, block_table),
-        gather_paged_rows(pool_v, block_table), start)
+def fuse_kv_pools(pool_k, pool_v):
+    """Split k/v pools [N, bs, nk, hd] -> one head-interleaved fused pool
+    [N, bs, 2 * nk, hd] (the layout the paged kernels consume)."""
+    return cm.interleave_kv(pool_k, pool_v)
 
 
-def paged_decode_attention_ref(q, pool_k, pool_v, block_tables, ctx):
-    """q [B, nq, hd]; pools [N, bs, nk, hd]; block_tables [B, M]; ctx [B]."""
-    return decode_attention_ref(
-        q, gather_paged_rows(pool_k, block_tables),
-        gather_paged_rows(pool_v, block_tables), ctx)
+def paged_chunked_prefill_attention_ref(q, pool_kv, block_table, start):
+    """q [C, nq, hd]; pool_kv [N, bs, 2*nk, hd] head-interleaved;
+    block_table [M]; start scalar."""
+    rows_k, rows_v = cm.split_fused_kv(
+        gather_paged_rows(pool_kv, block_table))
+    return chunked_prefill_attention_ref(q, rows_k, rows_v, start)
+
+
+def paged_decode_attention_ref(q, pool_kv, block_tables, ctx):
+    """q [B, nq, hd]; pool_kv [N, bs, 2*nk, hd] head-interleaved;
+    block_tables [B, M]; ctx [B]."""
+    rows_k, rows_v = cm.split_fused_kv(
+        gather_paged_rows(pool_kv, block_tables))
+    return decode_attention_ref(q, rows_k, rows_v, ctx)

@@ -24,6 +24,7 @@ the chunk and decode segments.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -75,12 +76,16 @@ def init_attn_cache(cfg: ModelConfig, rows: int, max_len: int, dtype) -> Dict:
 
 def init_paged_attn_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
                           dtype) -> Dict:
-    """Pooled KV for full-attention layers: ``[n_blocks, block_size, nk,
-    hd]`` addressed through per-request block tables (``repro.cache``).
-    Keys ``pk``/``pv`` (vs dense ``k``/``v``) mark the layout, so the
-    packed path and the engine's slot reset dispatch structurally."""
-    shp = (n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
-    return {"pk": jnp.zeros(shp, dtype), "pv": jnp.zeros(shp, dtype)}
+    """Pooled KV for full-attention layers: ONE fused leaf ``[n_blocks,
+    block_size, 2 * nk, hd]`` with K/V head-interleaved (K head ``h`` at
+    channel ``2h``, its V at ``2h + 1``), addressed through per-request
+    block tables (``repro.cache``).  One leaf instead of split ``pk``/
+    ``pv`` halves the block-table DMA count in the Pallas kernels and
+    halves the gather/scatter count on copy-on-write forks.  The key
+    ``pkv`` (vs dense ``k``/``v``) marks the layout, so the packed path
+    and the engine's slot reset dispatch structurally."""
+    shp = (n_blocks, block_size, 2 * cfg.n_kv_heads, cfg.head_dim)
+    return {"pkv": jnp.zeros(shp, dtype)}
 
 
 def init_swa_cache(cfg: ModelConfig, rows: int, window: int, dtype) -> Dict:
@@ -161,26 +166,86 @@ def cross_batched(cfg, p, x, cache, *, memory=None):
 # ------------------------------------------------------------ packed: attn
 import os
 
+_PAGED_ATTN_BACKENDS = ("xla", "pallas")
+
+# Mesh hint for the paged Pallas kernels under tensor parallelism.  GSPMD
+# cannot partition a pallas_call, so when a TP engine runs the pallas
+# backend the kernel invocations are wrapped in shard_map over the mesh's
+# "model" axis (kv-head channel pairs stay whole per shard — the engine
+# enforces nk % tp == 0 up front).  Set by the engines immediately before
+# each jitted step call (trace-time read, like the MoE dispatch hint).
+_PAGED_ATTN_MESH = None
+
+
+def set_paged_attn_mesh(mesh) -> None:
+    global _PAGED_ATTN_MESH
+    _PAGED_ATTN_MESH = mesh
+
 
 def _paged_attn_backend() -> str:
     """Attention backend for the paged packed path: "xla" (portable gather
     + blocked flash attention, the default) or "pallas" (the block-table
     scalar-prefetch kernels of repro.kernels — native on TPU, interpret
-    mode elsewhere)."""
-    return os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla")
+    mode elsewhere).  Unrecognized values raise instead of silently
+    falling through to xla."""
+    v = os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla")
+    if v not in _PAGED_ATTN_BACKENDS:
+        raise ValueError(
+            f"REPRO_PAGED_ATTN_BACKEND={v!r} is not a paged attention "
+            f"backend; allowed: {_PAGED_ATTN_BACKENDS}")
+    return v
+
+
+def _paged_shard_mesh(pool_kv):
+    """The mesh to shard_map the pallas kernels over, or None for the
+    single-device call.  Requires whole (K, V) channel pairs per shard —
+    the placement layer rejects nk % tp != 0 before any engine is built,
+    so this only double-checks divisibility at trace time."""
+    mesh = _PAGED_ATTN_MESH
+    if mesh is None:
+        return None
+    tp = mesh.shape.get("model", 1)
+    if tp <= 1:
+        return None
+    nk = pool_kv.shape[2] // 2
+    if nk % tp:
+        raise ValueError(
+            f"paged pallas backend under tp={tp} needs n_kv_heads "
+            f"({nk}) divisible by tp so K/V channel pairs stay whole "
+            f"per shard")
+    return mesh
+
+
+def _shard_map_heads(fn, mesh, n_table_args):
+    """shard_map ``fn(q, pool_kv, <tables...>, scalar)`` over the kv-head
+    axis: q [.., nq, hd] splits heads, pool [N, bs, 2nk, hd] splits
+    channel pairs, tables/ctx replicate.  Each shard runs the unmodified
+    single-device kernel on its local heads (block tables are physical —
+    identical on every shard), so tp>1 output == concat of per-shard
+    outputs over the head axis."""
+    from jax.experimental.shard_map import shard_map
+    P = jax.sharding.PartitionSpec
+    reps = (P(),) * n_table_args
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(None, "model", None),
+                  P(None, None, "model", None)) + reps,
+        out_specs=P(None, "model", None), check_rep=False)
 
 
 def _attn_packed_paged(cfg, p, q, k, v, pos, cache, pk: PackedBatch):
     """Block-table variant of the full-attention packed path: KV written
-    through (physical block, offset) scatter, read either via a dense-row
-    gather (XLA backend) or the paged Pallas kernels."""
+    through ONE (physical block, offset) scatter of the head-interleaved
+    [.., 2nk, hd] rows, read either via a fused-row gather + de-interleave
+    (XLA backend) or the fused-pool paged Pallas kernels."""
     C, D = pk.num_chunk, pk.num_decode
-    pool_k, pool_v = cache["pk"], cache["pv"]
-    bs = pool_k.shape[1]
+    pool_kv = cache["pkv"]
+    bs = pool_kv.shape[1]
     M = pk.chunk_blocks.shape[0]
     use_pallas = _paged_attn_backend() == "pallas"
     if use_pallas:
         from repro.kernels import ops as kops
+        mesh = _paged_shard_mesh(pool_kv)
     outs = []
     if C:
         cpos = pos[:C]
@@ -189,35 +254,39 @@ def _attn_packed_paged(cfg, p, q, k, v, pos, cache, pk: PackedBatch):
         bidx = cpos // bs
         phys = jnp.where(bidx < M,
                          pk.chunk_blocks[jnp.clip(bidx, 0, M - 1)], 0)
-        pool_k = pool_k.at[phys, cpos % bs].set(k[:C])
-        pool_v = pool_v.at[phys, cpos % bs].set(v[:C])
+        pool_kv = pool_kv.at[phys, cpos % bs].set(
+            cm.interleave_kv(k[:C], v[:C]))
         if use_pallas:
             bq = 128 if C % 128 == 0 else C
-            out_c = kops.paged_chunked_prefill_attention(
-                q[:C], pool_k, pool_v, pk.chunk_blocks, pk.chunk_start,
-                bq=bq)
+            call = functools.partial(kops.paged_chunked_prefill_attention,
+                                     bq=bq)
+            if mesh is not None:
+                call = _shard_map_heads(call, mesh, n_table_args=2)
+            out_c = call(q[:C], pool_kv, pk.chunk_blocks, pk.chunk_start)
         else:
-            row_k = cm.gather_block_rows(pool_k, pk.chunk_blocks)[None]
-            row_v = cm.gather_block_rows(pool_v, pk.chunk_blocks)[None]
-            out_c = cm.blocked_gqa_attention(q[None, :C], row_k, row_v,
-                                             cpos[None])[0]
+            rows = cm.gather_block_rows(pool_kv, pk.chunk_blocks)
+            row_k, row_v = cm.split_fused_kv(rows)
+            out_c = cm.blocked_gqa_attention(q[None, :C], row_k[None],
+                                             row_v[None], cpos[None])[0]
         outs.append(out_c)
     if D:
         bidx = (pk.decode_ctx // bs)[:, None]
         phys = jnp.take_along_axis(pk.decode_blocks, bidx, axis=1)[:, 0]
-        pool_k = pool_k.at[phys, pk.decode_ctx % bs].set(k[C:])
-        pool_v = pool_v.at[phys, pk.decode_ctx % bs].set(v[C:])
+        pool_kv = pool_kv.at[phys, pk.decode_ctx % bs].set(
+            cm.interleave_kv(k[C:], v[C:]))
         if use_pallas:
-            out_d = kops.paged_decode_attention(
-                q[C:], pool_k, pool_v, pk.decode_blocks, pk.decode_ctx)
+            call = kops.paged_decode_attention
+            if mesh is not None:
+                call = _shard_map_heads(call, mesh, n_table_args=2)
+            out_d = call(q[C:], pool_kv, pk.decode_blocks, pk.decode_ctx)
         else:
-            gk = cm.gather_block_rows(pool_k, pk.decode_blocks)
-            gv = cm.gather_block_rows(pool_v, pk.decode_blocks)
+            rows = cm.gather_block_rows(pool_kv, pk.decode_blocks)
+            gk, gv = cm.split_fused_kv(rows)
             out_d = cm.blocked_gqa_attention(
                 q[C:, None], gk, gv, pk.decode_ctx[:, None])[:, 0]
         outs.append(out_d)
     out = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
-    return out, {"pk": pool_k, "pv": pool_v}
+    return out, {"pkv": pool_kv}
 
 
 def attn_packed(cfg, p, x, cache, pk: PackedBatch,
@@ -230,7 +299,7 @@ def attn_packed(cfg, p, x, cache, pk: PackedBatch,
     q = cm.apply_rope(q, sin, cos)
     k = cm.apply_rope(k, sin, cos)
 
-    if "pk" in cache:
+    if "pkv" in cache:
         assert window is None, "window caches are slot-indexed, not paged"
         out, new_cache = _attn_packed_paged(cfg, p, q, k, v, pos, cache, pk)
         return out.reshape(C + D, cfg.q_dim) @ p["wo"], new_cache

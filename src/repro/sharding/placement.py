@@ -72,16 +72,26 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def check_tp_supported(tp: int, paged: bool) -> None:
-    """TP engines run the packed attention through XLA; the paged Pallas
-    kernels (``REPRO_PAGED_ATTN_BACKEND=pallas``) are single-device
-    block-table programs that GSPMD cannot partition — reject the
-    combination up front instead of failing opaquely at trace time."""
+def check_tp_supported(tp: int, paged: bool,
+                       cfg: Optional[ModelConfig] = None) -> None:
+    """TP support check for the paged attention backends.  GSPMD cannot
+    partition a ``pallas_call``, so the block-table kernels run under
+    shard_map over the kv-head axis instead (``repro.models.blocks``) —
+    which needs whole head-interleaved (K, V) channel pairs per shard,
+    i.e. ``n_kv_heads % tp == 0``.  Reject the indivisible case up front
+    instead of failing opaquely at trace time; the XLA gather backend
+    partitions under any divisibility (the policy falls back to block or
+    head_dim sharding)."""
     if tp <= 1 or not paged:
         return
     from repro.models.blocks import _paged_attn_backend
-    if _paged_attn_backend() == "pallas":
+    if _paged_attn_backend() != "pallas":
+        return
+    nk = cfg.n_kv_heads if cfg is not None else None
+    if nk is None or nk % tp:
         raise NotImplementedError(
-            "tp > 1 with the paged pallas attention backend is not "
-            "supported: the block-table kernels are not SPMD-partitionable;"
-            " use REPRO_PAGED_ATTN_BACKEND=xla for tensor-parallel engines")
+            f"tp={tp} with the paged pallas attention backend needs "
+            f"n_kv_heads divisible by tp (got n_kv_heads={nk}): the "
+            f"kernels shard_map over the kv-head axis and each shard "
+            f"must hold whole K/V channel pairs; use "
+            f"REPRO_PAGED_ATTN_BACKEND=xla for this config")

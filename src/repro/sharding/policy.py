@@ -212,11 +212,13 @@ def cache_pspecs(cfg: ModelConfig, shapes, *,
                  rows_axes: Optional[Tuple[str, ...]], mesh=None,
                  model_axis: Optional[int] = None):
     """Cache leaves: row (slot) dim shards over the batch axes; KV head /
-    state-head dims shard over model when divisible.  Paged block-pool
-    leaves (``pk``/``pv``, ``[n_blocks, block_size, nk, hd]``) have no row
-    dim — they shard the KV-head dim, falling back to the block dim
-    (context-parallel analogue) or head_dim per :func:`kv_shard_mode`, so
-    the pool never silently replicates under TP."""
+    state-head dims shard over model when divisible.  The fused paged
+    block-pool leaf (``pkv``, ``[n_blocks, block_size, 2 * nk, hd]``
+    head-interleaved) has no row dim — it shards the channel axis over
+    model when ``nk`` divides (keeping each head's adjacent (K, V) pair
+    on one shard), falling back to the block dim (context-parallel
+    analogue) or head_dim per :func:`kv_shard_mode`, so the pool never
+    silently replicates under TP."""
     if mesh is not None:
         if model_axis is not None:
             raise ValueError("pass either mesh= or model_axis=, not both")
@@ -253,8 +255,10 @@ def cache_pspecs(cfg: ModelConfig, shapes, *,
             if kv_mode in ("seq", "hd") and div(shp[-1]):
                 return spec(rspec, None, None, MDL)
             return spec(rspec, None, None, None)
-        if name in ("pk", "pv"):            # pool [n_blocks, bs, nk, hd]
-            if div(shp[-2]):
+        if name == "pkv":                   # fused pool [N, bs, 2nk, hd]
+            # channel pairs (K head h at 2h, V at 2h+1) must stay whole
+            # per shard: split only when nk itself divides the model axis
+            if shp[-2] % 2 == 0 and div(shp[-2] // 2):
                 return spec(None, None, MDL, None)
             if kv_mode == "seq" and div(shp[-4]):
                 return spec(MDL, None, None, None)       # block parallel

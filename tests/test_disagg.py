@@ -190,11 +190,11 @@ def test_paged_handoff_property(block_size, n_tokens, extra):
         return rng.standard_normal(
             (2, bm.n_blocks, bm.block_size, 2)).astype(np.float32)
 
-    src = {"groups": {"pk": pool(src_bm), "pv": pool(src_bm)},
+    src = {"groups": {"pkv": pool(src_bm)},
            "tail": [{"k": rng.standard_normal((3, 4)).astype(np.float32)}]}
-    dst = {"groups": {"pk": pool(dst_bm), "pv": pool(dst_bm)},
+    dst = {"groups": {"pkv": pool(dst_bm)},
            "tail": [{"k": np.zeros((3, 4), np.float32)}]}
-    dst_scratch_before = np.asarray(dst["groups"]["pk"][:, 0]).copy()
+    dst_scratch_before = np.asarray(dst["groups"]["pkv"][:, 0]).copy()
 
     src_table = src_bm.ensure(7, n_tokens)
     assert 0 not in src_table                    # scratch never allocated
@@ -203,7 +203,7 @@ def test_paged_handoff_property(block_size, n_tokens, extra):
     state = jax.device_get(_extract_state(src, slot=1, table=src_table))
     # the payload is exactly the table's blocks, in table order
     np.testing.assert_array_equal(
-        state["groups"]["pk"], src["groups"]["pk"][:, src_table])
+        state["groups"]["pkv"], src["groups"]["pkv"][:, src_table])
     assert state["tail"][0]["k"].shape == (4,)   # slot row extracted
 
     dst_table = dst_bm.ensure(9, len(src_table) * block_size)
@@ -212,12 +212,12 @@ def test_paged_handoff_property(block_size, n_tokens, extra):
                                         table=dst_table))
     # contents moved to the REMAPPED destination blocks
     np.testing.assert_array_equal(
-        np.asarray(out["groups"]["pk"])[:, dst_table],
-        src["groups"]["pk"][:, src_table])
+        np.asarray(out["groups"]["pkv"])[:, dst_table],
+        src["groups"]["pkv"][:, src_table])
     np.testing.assert_array_equal(
         np.asarray(out["tail"][0]["k"])[2], state["tail"][0]["k"])
     # scratch block 0 untouched on the receiving pool
-    np.testing.assert_array_equal(np.asarray(out["groups"]["pk"])[:, 0],
+    np.testing.assert_array_equal(np.asarray(out["groups"]["pkv"])[:, 0],
                                   dst_scratch_before)
     # accounting conserved: src frees what dst now holds
     assert dst_bm.n_used == need

@@ -73,9 +73,9 @@ def test_shape_support_matrix():
 
 
 def test_paged_pool_leaves_shard_on_production_mesh():
-    """pk/pv pool leaves [n_blocks, bs, nk, hd] must carry model-axis
-    specs (kv heads divide 16 for tinyllama's full config) — the paged
-    cache must not silently replicate under TP."""
+    """The fused pkv pool leaf [n_blocks, bs, 2*nk, hd] must carry
+    model-axis specs — the paged cache must not silently replicate
+    under TP."""
     import functools
     cfg = get_config("tinyllama-1.1b")
     cshapes = jax.eval_shape(
@@ -86,13 +86,12 @@ def test_paged_pool_leaves_shard_on_production_mesh():
     pool = specs["groups"][0]["attn"]
     # tinyllama GQA: nk=4 doesn't divide 16, nor do the 33 blocks; the
     # default "seq" mode falls back to head_dim (64 % 16 == 0)
-    assert pool["pk"] == P(None, None, None, None, "model")
-    assert pool["pv"] == P(None, None, None, None, "model")
-    # at tp=2 the kv-head dim itself shards (4 % 2 == 0)
+    assert pool["pkv"] == P(None, None, None, None, "model")
+    # at tp=2 the channel dim shards by whole K/V pairs (4 % 2 == 0)
     m2 = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
     pool2 = sh.cache_pspecs(cfg, cshapes, rows_axes=None,
                             mesh=m2)["groups"][0]["attn"]
-    assert pool2["pk"] == P(None, None, None, "model", None)
+    assert pool2["pkv"] == P(None, None, None, "model", None)
 
 
 def test_policy_is_shared_with_serving_layer():

@@ -28,12 +28,13 @@ def test_paged_decode_attention(B, M, bs, nq, nk, hd, dtype):
     q = jax.random.normal(ks[0], (B, nq, hd), dtype)
     pool_k = jax.random.normal(ks[1], (N, bs, nk, hd), dtype)
     pool_v = jax.random.normal(ks[2], (N, bs, nk, hd), dtype)
+    pool = ref.fuse_kv_pools(pool_k, pool_v)
     # non-trivial physical layout: blocks deliberately scattered
     perm = np.random.default_rng(0).permutation(np.arange(1, N))
     bt = perm[:B * M].reshape(B, M).astype(np.int32)
     ctx = jax.random.randint(jax.random.PRNGKey(9), (B,), 0, M * bs)
-    out = ops.paged_decode_attention(q, pool_k, pool_v, bt, ctx)
-    want = ref.paged_decode_attention_ref(q, pool_k, pool_v, bt, ctx)
+    out = ops.paged_decode_attention(q, pool, bt, ctx)
+    want = ref.paged_decode_attention_ref(q, pool, bt, ctx)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
@@ -52,15 +53,58 @@ def test_paged_chunked_prefill_attention(C, M, bs, nq, nk, hd, start, dtype):
     q = jax.random.normal(ks[0], (C, nq, hd), dtype)
     pool_k = jax.random.normal(ks[1], (N, bs, nk, hd), dtype)
     pool_v = jax.random.normal(ks[2], (N, bs, nk, hd), dtype)
+    pool = ref.fuse_kv_pools(pool_k, pool_v)
     bt = np.random.default_rng(1).permutation(np.arange(1, N))[:M] \
         .astype(np.int32)
-    out = ops.paged_chunked_prefill_attention(q, pool_k, pool_v, bt, start)
-    want = ref.paged_chunked_prefill_attention_ref(q, pool_k, pool_v, bt,
-                                                   start)
+    out = ops.paged_chunked_prefill_attention(q, pool, bt, start)
+    want = ref.paged_chunked_prefill_attention_ref(q, pool, bt, start)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+# every (kv_pages, n_buffers) tiling — serial, double- and quad-buffered,
+# incl. a page count that does NOT divide the table — must agree with the
+# single-DMA-per-step pipeline bit-for-bit (same accumulation order: pages
+# fold in logical order inside each step)
+@pytest.mark.parametrize("kv_pages,n_buffers",
+                         [(1, 1), (1, 4), (2, 2), (3, 2), (4, 4)])
+def test_paged_decode_attention_buffering_variants(kv_pages, n_buffers):
+    from repro.kernels import paged_decode_attention as pda
+    B, M, bs, nq, nk, hd = 3, 5, 16, 4, 2, 64
+    N = B * M + 1
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, nq, hd))
+    pool = jax.random.normal(ks[1], (N, bs, 2 * nk, hd))
+    perm = np.random.default_rng(4).permutation(np.arange(1, N))
+    bt = perm[:B * M].reshape(B, M).astype(np.int32)
+    ctx = jnp.array([3, 37, 79], jnp.int32)
+    want = ref.paged_decode_attention_ref(q, pool, bt, ctx)
+    out = pda.paged_decode_attention(q, pool, bt, ctx, kv_pages=kv_pages,
+                                     n_buffers=n_buffers, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_pages,n_buffers",
+                         [(1, 1), (1, 4), (2, 2), (3, 2), (4, 4)])
+def test_paged_chunked_prefill_attention_buffering_variants(kv_pages,
+                                                            n_buffers):
+    from repro.kernels import paged_chunked_prefill_attention as pcpa
+    C, M, bs, nq, nk, hd, start = 32, 5, 16, 4, 2, 64, 41
+    N = M + 3
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    q = jax.random.normal(ks[0], (C, nq, hd))
+    pool = jax.random.normal(ks[1], (N, bs, 2 * nk, hd))
+    bt = np.random.default_rng(5).permutation(np.arange(1, N))[:M] \
+        .astype(np.int32)
+    want = ref.paged_chunked_prefill_attention_ref(q, pool, bt, start)
+    out = pcpa.paged_chunked_prefill_attention(
+        q, pool, bt, start, bq=16, kv_pages=kv_pages, n_buffers=n_buffers,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_paged_kernels_ignore_scratch_padded_tail():
@@ -68,18 +112,16 @@ def test_paged_kernels_ignore_scratch_padded_tail():
     (garbage) contents must never affect the output."""
     B, M, bs, nq, nk, hd = 2, 4, 16, 4, 2, 64
     N = B * M + 1
-    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
     q = jax.random.normal(ks[0], (B, nq, hd))
-    pool_k = jax.random.normal(ks[1], (N, bs, nk, hd))
-    pool_v = jax.random.normal(ks[2], (N, bs, nk, hd))
+    pool = jax.random.normal(ks[1], (N, bs, 2 * nk, hd))
     bt = np.arange(1, 1 + B * M).reshape(B, M).astype(np.int32)
     ctx = jnp.array([20, 40])
     bt_padded = bt.copy()
     bt_padded[0, 2:] = 0                       # ctx 20 fits in 2 blocks
-    out_full = ops.paged_decode_attention(q, pool_k, pool_v, bt, ctx)
-    pool_k2 = pool_k.at[0].set(99.0)           # poison the scratch block
-    pool_v2 = pool_v.at[0].set(-99.0)
-    out_pad = ops.paged_decode_attention(q, pool_k2, pool_v2, bt_padded, ctx)
+    out_full = ops.paged_decode_attention(q, pool, bt, ctx)
+    pool2 = pool.at[0].set(99.0)               # poison the scratch block
+    out_pad = ops.paged_decode_attention(q, pool2, bt_padded, ctx)
     np.testing.assert_allclose(np.asarray(out_full), np.asarray(out_pad),
                                rtol=1e-6, atol=1e-6)
 

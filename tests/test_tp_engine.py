@@ -30,7 +30,7 @@ import pytest
 import repro.scheduler.request as request_mod
 from repro import sharding as shd
 from repro.configs import get_config
-from repro.core import SamplingParams
+from repro.core import ChunkWork, DecodeWork, IterationPlan, SamplingParams
 from repro.core.engine import Engine
 from repro.models import build_model
 from repro.scheduler import Request
@@ -133,8 +133,9 @@ def test_engines_and_launch_share_one_policy():
 
 
 def test_paged_pool_leaves_have_tp_specs():
-    """Satellite: pk/pv pool leaves [n_blocks, bs, nk, hd] must shard
-    under TP (kv-head dim here: nk=2 divides tp=2), not replicate."""
+    """Satellite: the fused pkv pool leaf [n_blocks, bs, 2*nk, hd] must
+    shard under TP (channel-pair dim here: nk=2 divides tp=2), not
+    replicate."""
     cfg, _ = _cfg_params()
     model = build_model(cfg)
     shapes = jax.eval_shape(
@@ -147,13 +148,16 @@ def test_paged_pool_leaves_have_tp_specs():
 
     def check(path, spec):
         keys = [getattr(p, "key", None) for p in path]
-        if keys and keys[-1] in ("pk", "pv"):
+        if keys and keys[-1] == "pkv":
             found.append(spec)
 
     jax.tree_util.tree_map_with_path(check, specs)
     assert found, "no pool leaves in the paged cache spec tree"
     for spec in found:
         assert "model" in tuple(spec), f"pool leaf replicated: {spec}"
+        # the channel axis is the sharded one: adjacent (K, V) pairs must
+        # land on one shard, which needs nk (not 2nk) to divide tp
+        assert tuple(spec)[-2] == "model"
 
 
 def test_mesh_derived_axis_sizes():
@@ -180,9 +184,9 @@ def test_mesh_derived_axis_sizes():
 def test_tp2_logits_within_tolerance(paged):
     """The tp>1 equivalence contract, pinned at its source: the same
     packed step over sharded vs unsharded params/cache produces logits
-    within the documented tolerance (all-reduce reordering only)."""
-    if paged and _PAGED_PALLAS:
-        pytest.skip("tp>1 rejects the paged pallas backend")
+    within the documented tolerance (all-reduce reordering only).  Runs
+    under BOTH paged backends: with pallas the kernels go through the
+    shard_map-over-kv-heads wrapper (the mesh hint an engine would set)."""
     cfg, params = _cfg_params()
     model = build_model(cfg)
     kw = dict(paged_blocks=17, block_size=8) if paged else {}
@@ -191,7 +195,6 @@ def test_tp2_logits_within_tolerance(paged):
                  decode_slots=2, paged=paged, block_size=8)
     eng.add_request(0)
     eng.add_request(1)
-    from repro.core.engine import ChunkWork, DecodeWork
     pk = eng._pack(ChunkWork(0, [1, 2, 3, 4, 5], 0, True),
                    [DecodeWork(1, 9, 3)])
 
@@ -203,7 +206,12 @@ def test_tp2_logits_within_tolerance(paged):
     mesh = shd.make_tp_mesh(2)
     sp = shd.shard_params(cfg, params, mesh)
     sc = shd.shard_cache(cfg, cache, mesh)
-    tp_cl, tp_dl = jax.jit(fwd)(sp, sc)
+    from repro.models import blocks as bk
+    bk.set_paged_attn_mesh(mesh if (paged and _PAGED_PALLAS) else None)
+    try:
+        tp_cl, tp_dl = jax.jit(fwd)(sp, sc)
+    finally:
+        bk.set_paged_attn_mesh(None)
     np.testing.assert_allclose(np.asarray(ref_cl), np.asarray(tp_cl),
                                atol=_ATOL, rtol=_RTOL)
     np.testing.assert_allclose(np.asarray(ref_dl), np.asarray(tp_dl),
@@ -222,12 +230,41 @@ def test_tp2_params_and_cache_actually_shard():
     assert len(k.devices()) == 2
 
 
-def test_tp2_paged_pallas_backend_rejected(monkeypatch):
+@_need(2)
+def test_tp2_paged_pallas_backend_accepted(monkeypatch):
+    """The PR-4 restriction is LIFTED: tp=2 + pallas (nk=2 divides 2)
+    builds, serves, and matches the unsharded pallas engine.  Greedy on
+    CPU's deterministic reductions: these seeds agree token-for-token
+    (the contract itself is the 2e-5 logits tier pinned above)."""
     monkeypatch.setenv("REPRO_PAGED_ATTN_BACKEND", "pallas")
     cfg, params = _cfg_params()
-    with pytest.raises(NotImplementedError, match="pallas"):
+    prompt = [1, 5, 9, 13, 2, 7]
+
+    def gen(tp):
+        eng = Engine(cfg, params, n_slots=1, max_len=64, chunk_size=8,
+                     decode_slots=1, paged=True, block_size=8, tp=tp)
+        eng.add_request(0)
+        out = [eng.execute(IterationPlan(chunk=ChunkWork(
+            0, prompt, 0, True)))[0]]
+        for _ in range(2):
+            out.append(eng.execute(IterationPlan(decodes=[DecodeWork(
+                0, out[-1], len(prompt) + len(out) - 1)]))[0])
+        eng.release(0)
+        return out
+
+    want = gen(1)
+    got = gen(2)                                # previously: raised
+    assert got == want
+
+
+def test_tp_paged_pallas_needs_divisible_kv_heads(monkeypatch):
+    """Residual restriction: shard_map keeps whole K/V channel pairs per
+    shard, so nk % tp != 0 (here 2 % 3) is still rejected up front."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN_BACKEND", "pallas")
+    cfg, params = _cfg_params()
+    with pytest.raises(NotImplementedError, match="divisible"):
         Engine(cfg, params, n_slots=2, max_len=64, chunk_size=8,
-               decode_slots=1, paged=True, block_size=8, tp=2)
+               decode_slots=1, paged=True, block_size=8, tp=3)
 
 
 # ------------------------------------------------------- tp x pp grid
@@ -237,9 +274,9 @@ def test_tp2_paged_pallas_backend_rejected(monkeypatch):
 @pytest.mark.parametrize("paged", [False, True])
 def test_grid_tokens_match_reference(pp, tp, paged):
     """tp x pp x {dense,paged}, greedy: tp=1 rows must be bit-identical;
-    tp=2 rows must meet the tolerance-tier token contract."""
-    if paged and tp > 1 and _PAGED_PALLAS:
-        pytest.skip("tp>1 rejects the paged pallas backend")
+    tp=2 rows must meet the tolerance-tier token contract.  Under
+    REPRO_PAGED_ATTN_BACKEND=pallas the paged tp=2 rows exercise the
+    shard_map'd fused-pool kernels (the previously rejected case)."""
     ref = _serve_default(paged)
     got = _serve(pp, tp, paged)
     if tp == 1:
