@@ -1,6 +1,6 @@
 """Memory-capacity sweep: paged KV block pool vs dense slot rows.
 
-Two views, both at an EQUAL HBM budget (device capacity minus weights):
+Three views, all at an EQUAL HBM budget (device capacity minus weights):
 
 1. **Analytic capacity** — how many concurrent requests each layout can
    hold as a function of actual context length: the dense cache reserves
@@ -11,6 +11,16 @@ Two views, both at an EQUAL HBM budget (device capacity minus weights):
    scheduler managing the same token budget as a pool: reports the peak
    concurrent in-flight requests, pool utilization, preemptions and
    recompute overhead per (block_size, n_blocks) point.
+3. **Preemption-policy sweep** — long-context bursty load on ONE pool
+   geometry under ``preempt_mode`` in {recompute, swap, hybrid}: the same
+   device pool, the swap modes adding a host tier reached over PCIe
+   (``repro.sim.kv_swap_time``).  Reports peak KV-resident requests
+   (running + swapped — the host tier keeps victims resident where
+   recompute destroys their KV), swap traffic, and cost-model throughput.
+   Self-gated: swap must hold strictly MORE resident requests than
+   recompute at equal device HBM, and (unless ``--skip-measured``) the
+   REAL engine must produce bit-identical greedy outputs across all
+   three policies (exit 1 on violation).
 
     PYTHONPATH=src python -m benchmarks.memory \
         [--arch tinyllama-1.1b] [--hw a100-80gb] [--max-len 4096] \
@@ -27,7 +37,19 @@ from typing import List, Optional
 
 ROW_FIELDS = ("mode", "block_size", "n_blocks", "seq_len", "capacity",
               "vs_dense", "peak_inflight", "peak_pool_util",
-              "preemptions", "recompute_per_token", "throughput")
+              "preemptions", "recompute_per_token", "throughput",
+              "policy", "host_blocks", "peak_resident", "swap_outs",
+              "swap_ins", "kv_swap_s")
+
+# preemption-policy sweep geometry: ONE pool (49 x 32-token blocks),
+# long-context bursty load.  Chosen so the pool is the binding resource
+# (a burst of 1024-token prompts overflows 1536 usable tokens) and the
+# host tier is big enough to park any victim set.
+POLICY_POOL = dict(n_blocks=49, block_size=32, host_blocks=160,
+                   watermark=0.05)
+POLICY_SCHED = dict(n_slots=8, chunk_size=64, token_budget=72)
+POLICY_LOAD = dict(rate=64.0, burst=8, pd_ratio=16.0, min_len=64,
+                   max_len=1024)
 
 # the simulated workload's prompt + decode total is bounded by this (the
 # online_workload max_len), so it is exactly the per-slot row length an
@@ -113,7 +135,149 @@ def simulated_rows(cfg, hw, *, block_sizes, n_blocks_list, n: int,
     return rows
 
 
-def main(argv=None) -> None:
+def policy_rows(cfg, hw, *, n: int, seed: int) -> List[dict]:
+    """Preemption-policy sweep: recompute vs swap vs hybrid on ONE pool
+    geometry under long-context bursty load (cost-model clock).  The
+    workload and pool are identical across policies — only what happens
+    to pool-pressure victims differs — so every column is deterministic
+    and identity-pinned by the CI baseline."""
+    from repro.cache import BlockManager
+    from repro.scheduler import POLICIES
+    from repro.serving import CostModelExecutor, online_workload, \
+        serve_online
+
+    slots = POLICY_SCHED["n_slots"]
+    rows = []
+    for policy in ("recompute", "swap", "hybrid"):
+        hb = 0 if policy == "recompute" else POLICY_POOL["host_blocks"]
+        bm = BlockManager(POLICY_POOL["n_blocks"],
+                          POLICY_POOL["block_size"],
+                          watermark=POLICY_POOL["watermark"],
+                          host_blocks=hb)
+        kw = dict(n_slots=slots, max_decodes=slots - 1,
+                  chunk_size=POLICY_SCHED["chunk_size"],
+                  token_budget=POLICY_SCHED["token_budget"],
+                  block_manager=bm, preempt_mode=policy,
+                  admit_backoff=False)
+        if policy == "hybrid":
+            kw.update(swap_cfg=cfg, swap_hw=hw)
+        sched = POLICIES["sarathi_serve"](**kw)
+        reqs = online_workload(n, arrival="bursty",
+                               vocab_size=cfg.vocab_size, seed=seed,
+                               **POLICY_LOAD)
+        res = serve_online(sched, CostModelExecutor(cfg, hw), reqs)
+        s = res.summary()
+        if bm.n_swapped != 0 or bm.n_host_free != bm.n_host_slots:
+            raise RuntimeError(f"policy={policy}: host tier not drained "
+                               f"({bm.n_swapped} blocks still swapped)")
+        rows.append(dict(
+            mode="policy", policy=policy,
+            block_size=POLICY_POOL["block_size"],
+            n_blocks=POLICY_POOL["n_blocks"], host_blocks=hb,
+            seq_len=POLICY_LOAD["max_len"],
+            capacity=res.peak_resident, peak_resident=res.peak_resident,
+            peak_pool_util=res.peak_pool_util,
+            preemptions=res.n_preemptions, swap_outs=res.n_swap_outs,
+            swap_ins=res.n_swap_ins, kv_swap_s=round(res.kv_swap_time, 6),
+            recompute_per_token=s.recompute_overhead,
+            throughput=s.throughput))
+    base = next(r for r in rows if r["policy"] == "recompute")
+    for r in rows:
+        r["vs_dense"] = (r["peak_resident"] / base["peak_resident"]
+                         if base["peak_resident"] else float("inf"))
+    return rows
+
+
+def check_policy_rows(rows: List[dict]) -> List[str]:
+    """The self-gate on the policy sweep: the host tier must actually buy
+    capacity and traffic must flow over it."""
+    by = {r["policy"]: r for r in rows if r.get("mode") == "policy"}
+    failures = []
+    if by["swap"]["peak_resident"] <= by["recompute"]["peak_resident"]:
+        failures.append(
+            f"swap sustains {by['swap']['peak_resident']} resident "
+            f"requests vs recompute's {by['recompute']['peak_resident']} "
+            f"at equal device HBM — the host tier bought nothing")
+    for p in ("swap", "hybrid"):
+        if by[p]["swap_outs"] == 0:
+            failures.append(f"policy={p} never swapped — the load no "
+                            f"longer pressures the pool")
+        if by[p]["swap_outs"] != by[p]["swap_ins"]:
+            failures.append(f"policy={p}: {by[p]['swap_outs']} swap-outs "
+                            f"vs {by[p]['swap_ins']} swap-ins (leak)")
+        if by[p]["kv_swap_s"] <= 0:
+            failures.append(f"policy={p} charged no PCIe time")
+    return failures
+
+
+def measured_identity(cfg_full, *, seed: int) -> Optional[str]:
+    """Real-engine gate: greedy outputs must be bit-identical across
+    preempt_mode in {recompute, swap, hybrid} AND the dense (unpaged)
+    baseline on a reduced CPU model under pool pressure — swap must
+    restore the exact KV bytes recompute regenerates.  Returns an error
+    string on divergence."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.models import build_model
+    from repro.scheduler import Request
+    from repro.serving import OnlineServer
+
+    base = cfg_full.reduced()
+    heads = max(base.n_heads // 2, 1)
+    cfg = dataclasses.replace(
+        base, n_layers=2, d_model=128, n_heads=heads,
+        n_kv_heads=min(base.n_kv_heads, heads), head_dim=128 // heads,
+        d_ff=256, vocab_size=min(base.vocab_size, 512))
+    params = build_model(cfg).init_params(jax.random.PRNGKey(seed))
+
+    # 7 usable blocks of 8: both prompts admit (3 blocks each) but decode
+    # growth needs an 8th block, so the later request gets evicted —
+    # recompute re-prefills it, swap round-trips it over the host arena
+    def reqs():
+        return [Request(prompt=np.random.default_rng(seed + i).integers(
+                    0, cfg.vocab_size, 17).tolist(),
+                    max_new_tokens=10, arrival_time=0.0) for i in range(2)]
+
+    kw = dict(chunk_size=8, n_slots=3, max_len=64, max_prompt_len=32,
+              token_budget=16, seed=seed)
+
+    def run(srv):
+        """Outputs by submission position (req_ids are run-global)."""
+        rs = reqs()
+        res = srv.run(rs)
+        return res, [res.outputs[r.req_id] for r in rs]
+
+    _, dense = run(OnlineServer(cfg, params, **kw))
+    outs = {"dense": dense}
+    for policy in ("recompute", "swap", "hybrid"):
+        srv = OnlineServer(cfg, params, paged=True, block_size=8,
+                           n_blocks=8,
+                           host_blocks=0 if policy == "recompute" else 16,
+                           preempt_mode=policy, **kw)
+        res, outs[policy] = run(srv)
+        if res.n_preemptions == 0:
+            return (f"measured policy={policy} run never preempted — "
+                    f"the pressure scenario no longer bites")
+        if policy != "recompute" and res.n_swap_outs == 0:
+            return (f"measured policy={policy} run never swapped — "
+                    f"the pressure scenario no longer exercises the "
+                    f"swap path")
+        if srv.engine.block_manager.n_used != 0:
+            return f"measured policy={policy} run left the pool undrained"
+    for policy in ("recompute", "swap", "hybrid"):
+        if outs[policy] != outs["dense"]:
+            bad = [i for i, (a, b) in enumerate(zip(outs[policy],
+                                                    outs["dense"]))
+                   if a != b]
+            return (f"IDENTITY VIOLATION: preempt_mode={policy} diverged "
+                    f"from the dense baseline on prompt(s) {bad}")
+    return None
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--hw", default="a100-80gb")
@@ -129,6 +293,9 @@ def main(argv=None) -> None:
     ap.add_argument("--rate", type=float, default=16.0)
     ap.add_argument("--n-chips", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="skip the real-engine bit-identity gate across "
+                         "preempt modes (cost-model columns only)")
     ap.add_argument("--json", default="BENCH_memory.json",
                     help="machine-readable artifact path ('' disables)")
     args = ap.parse_args(argv)
@@ -151,17 +318,38 @@ def main(argv=None) -> None:
                            n_blocks_list=n_blocks_list, n=args.n,
                            chunk=args.chunk, slots=args.slots,
                            rate=args.rate, seed=args.seed)
+    prows = policy_rows(cfg, hw, n=args.n, seed=args.seed)
+    rows += prows
 
     print(",".join(ROW_FIELDS))
     for r in rows:
         print(",".join(str(r.get(f, "")) for f in ROW_FIELDS))
+
+    failures = check_policy_rows(prows)
+    if not args.skip_measured:
+        err = measured_identity(cfg, seed=args.seed)
+        if err:
+            failures.append(err)
+        else:
+            print("# real-engine greedy outputs bit-identical across "
+                  "preempt_mode={recompute,swap,hybrid}", file=sys.stderr)
+    if failures:
+        for msg in failures:
+            print(f"POLICY GATE VIOLATION: {msg}", file=sys.stderr)
+        return 1
+    by = {r["policy"]: r for r in prows}
+    print(f"# swap tier holds {by['swap']['peak_resident']} resident "
+          f"requests vs recompute's {by['recompute']['peak_resident']} at "
+          f"equal device HBM ({by['swap']['swap_outs']} swap-outs, "
+          f"{by['swap']['kv_swap_s']:.6g}s PCIe)", file=sys.stderr)
 
     if args.json:
         from benchmarks.latency import write_bench_json
         write_bench_json(args.json, name="memory_sweep",
                          params=vars(args), rows=rows)
         print(f"# wrote {args.json}", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -42,7 +42,6 @@ def main():
     outputs = {}
     for policy in policies:
         reqs = [Request(prompt=p, max_new_tokens=d) for p, d in wl]
-        memory = None
         if model.needs_memory:
             for r in reqs:
                 r.memory = jax.random.normal(

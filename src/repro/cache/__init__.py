@@ -44,12 +44,31 @@ Tuning
 Preemption semantics
 --------------------
 When a decode append finds the pool dry, the scheduler preempts the
-lowest-priority (latest-admitted) running request: its blocks are freed,
-its request state is reset for **recompute** (prompt + generated tokens
-re-enter as one prefill), and it rejoins the head of the waiting queue.
-Under greedy sampling recompute is exact — the regenerated KV is
-bit-identical, so preemption is invisible in the output stream and shows
-up only as latency (tracked per request as ``recompute_tokens``).
+lowest-priority (latest-admitted) running request.  What happens to the
+victim's KV is the scheduler's ``preempt_mode``:
+
+* **recompute** (default) — its blocks are freed and its request state
+  is reset (prompt + generated tokens re-enter as one prefill); cost is
+  tracked per request as ``recompute_tokens``;
+* **swap** — with ``host_blocks > 0`` the :class:`BlockManager` also
+  owns a host-RAM tier of block-sized slots (the engine mirrors it with
+  a pinned numpy arena): ``swap_out`` moves the victim's whole mapping
+  to host slots and returns its device blocks to the free list,
+  ``swap_in`` rebuilds the table from fresh blocks and streams the
+  bytes back before the victim's next chunk.  Only fully *exclusive*
+  tables are swappable — a block shared with another request or pinned
+  by the prefix cache outlives the victim, so those victims fall back
+  to recompute.  The host ledger keeps its own conservation invariant,
+  ``n_host_free + n_swapped == n_host_slots``, mirroring the device
+  pool's ``n_free + n_referenced == n_usable``;
+* **hybrid** — per victim, the cost model compares the PCIe round trip
+  (``2 * kv_swap_time``) against re-prefilling the context and picks
+  the cheaper restore path.
+
+In every mode the victim rejoins the head of the waiting queue.  Under
+greedy sampling all three are exact — swap restores the very bytes
+recompute would regenerate — so preemption is invisible in the output
+stream and shows up only as latency and swap/recompute traffic.
 """
 from repro.cache.block_manager import BlockManager, PoolExhausted
 from repro.cache.prefix_cache import PrefixCache

@@ -28,6 +28,22 @@ Blocks whose only remaining reference is the prefix-cache index are
 **reclaimable**: capacity queries count them as available, and an
 allocation that would otherwise exhaust the pool evicts them LRU-first
 through the attached cache (:attr:`prefix_cache`).
+
+Host swap tier
+--------------
+With ``host_blocks > 0`` the manager also owns a pool of **host slots** —
+block-sized rows in a host-RAM arena the engine mirrors (vLLM's
+``blocks_to_swap_in/out``).  :meth:`swap_out` moves a victim request's
+mapping wholesale to the host ledger (``_swapped``): its device blocks
+return to the free list, each paired with a host slot the engine streams
+the block's contents into; :meth:`swap_in` is the inverse — fresh device
+blocks (reclaiming prefix-cache blocks if needed) rebuild the table before
+the victim's next chunk.  Only fully *exclusive* tables are swappable:
+a block that is shared with another request or pinned by the prefix cache
+has a life beyond the victim, so such victims fall back to
+preempt-for-recompute.  Device conservation is untouched (swap-out is
+decref-to-free), and the host pool keeps its own mirror invariant
+``n_host_free + n_swapped == n_host_slots``.
 """
 from __future__ import annotations
 
@@ -51,13 +67,15 @@ class BlockManager:
     """
 
     def __init__(self, n_blocks: int, block_size: int, *,
-                 watermark: float = 0.0):
+                 watermark: float = 0.0, host_blocks: int = 0):
         if n_blocks < 2:
             raise ValueError("need >= 2 blocks (one is reserved scratch)")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         if not 0.0 <= watermark < 1.0:
             raise ValueError("watermark must be in [0, 1)")
+        if host_blocks < 0:
+            raise ValueError("host_blocks must be >= 0")
         self.n_blocks = int(n_blocks)
         self.block_size = int(block_size)
         self.scratch_block = 0
@@ -69,6 +87,13 @@ class BlockManager:
         # optional PrefixCache (attached by its constructor): the LRU
         # index whose cache-only blocks are reclaimable under pressure
         self.prefix_cache = None
+        # host swap tier: free host slots + per-request swapped ledger
+        # (host slots, in table order).  Slots are indices into the
+        # engine's host arena, disjoint from device block ids.
+        self.n_host_slots = int(host_blocks)
+        self._host_free: List[int] = list(range(self.n_host_slots - 1,
+                                                -1, -1))
+        self._swapped: Dict[int, List[int]] = {}
 
     # ------------------------------------------------------------- queries
     @property
@@ -96,6 +121,17 @@ class BlockManager:
     @property
     def utilization(self) -> float:
         return self.n_used / self.n_usable if self.n_usable else 0.0
+
+    @property
+    def n_host_free(self) -> int:
+        return len(self._host_free)
+
+    @property
+    def n_swapped(self) -> int:
+        """Host slots currently holding swapped-out blocks.  The host
+        ledger's conservation invariant (mirroring the device pool's) is
+        ``n_host_free + n_swapped == n_host_slots``."""
+        return sum(len(s) for s in self._swapped.values())
 
     def refcount(self, block: int) -> int:
         return self._refs.get(block, 0)
@@ -247,8 +283,112 @@ class BlockManager:
         """Drop ``req_id``'s references (idempotent: the scheduler frees
         on finish/preempt and the engine frees on slot release — whichever
         runs second is a no-op).  Shared blocks merely decrement; returns
-        the number of blocks that actually went back to the free list."""
+        the number of blocks that actually went back to the free list.
+        The host swap ledger is untouched: after a swap-out the engine's
+        slot release still calls :meth:`free` (the table is already gone,
+        so it is a no-op) and the swapped bytes must survive until
+        :meth:`swap_in` or :meth:`drop_swap`."""
         table = self._tables.pop(req_id, None)
         if not table:
             return 0
         return sum(self._decref(b) for b in reversed(table))
+
+    # --------------------------------------------------------- host swap
+    def is_swapped(self, req_id: int) -> bool:
+        return req_id in self._swapped
+
+    def swapped_blocks(self, req_id: int) -> int:
+        return len(self._swapped.get(req_id, ()))
+
+    def can_swap_out(self, req_id: int) -> bool:
+        """Is ``req_id`` a swap candidate?  Requires a non-empty table of
+        EXCLUSIVELY owned blocks (a block shared with another table or
+        pinned by the prefix cache outlives the victim — swapping it out
+        would tear KV other readers still address, so those victims fall
+        back to recompute) and enough free host slots for the whole
+        mapping."""
+        table = self._tables.get(req_id)
+        if not table or req_id in self._swapped:
+            return False
+        if len(table) > len(self._host_free):
+            return False
+        return all(self._refs[b] == 1 for b in table)
+
+    def swap_out(self, req_id: int) -> List[Tuple[int, int]]:
+        """Move ``req_id``'s whole mapping to the host tier: its device
+        blocks return to the free list and a host slot is reserved per
+        block.  Returns ``(device_block, host_slot)`` pairs in table order
+        — the engine must stream those device blocks' contents into the
+        arena BEFORE any of them is reallocated (the serving loops call
+        the engine hook synchronously, so ordering holds)."""
+        if not self.can_swap_out(req_id):
+            raise ValueError(
+                f"req {req_id} is not swappable (empty/shared/pinned "
+                f"table, already swapped, or {self.n_host_free} host "
+                f"slots free for {len(self._tables.get(req_id, ()))} "
+                f"blocks)")
+        table = self._tables.pop(req_id)
+        slots: List[int] = []
+        pairs: List[Tuple[int, int]] = []
+        for b in table:
+            s = self._host_free.pop()
+            self._decref(b)          # exclusive: goes back to free list
+            slots.append(s)
+            pairs.append((b, s))
+        self._swapped[req_id] = slots
+        return pairs
+
+    def can_swap_in(self, req_id: int, watermark: bool = False) -> bool:
+        """Could ``req_id``'s swapped mapping be rebuilt on device right
+        now, counting evictable prefix-cache blocks as free?
+
+        ``watermark=True`` additionally demands the admission headroom on
+        top of the rebuilt table — the anti-thrash discipline: resuming a
+        victim into a pool with zero slack would immediately re-trigger
+        the preemption that evicted it.  Callers drop the watermark when
+        the victim is the only work left (it must resume eventually)."""
+        slots = self._swapped.get(req_id)
+        if slots is None:
+            return False
+        floor = self.watermark_blocks if watermark else 0
+        return len(slots) + floor <= self.n_free + self.n_reclaimable
+
+    def swap_in(self, req_id: int) -> List[Tuple[int, int]]:
+        """Rebuild ``req_id``'s table from fresh device blocks (reclaiming
+        prefix-cache blocks if needed) and release its host slots.
+        Returns ``(host_slot, device_block)`` pairs in table order so the
+        engine can scatter the arena rows back before the victim's next
+        chunk runs."""
+        slots = self._swapped.get(req_id)
+        if slots is None:
+            raise ValueError(f"req {req_id} is not swapped out")
+        if self._tables.get(req_id):
+            raise ValueError(f"req {req_id} holds device blocks while "
+                             f"swapped — ledger corrupted")
+        need = len(slots)
+        if need > self.n_free:
+            self._reclaim(need)
+        if need > self.n_free:
+            raise PoolExhausted(
+                f"req {req_id}: swap-in needs {need} blocks, "
+                f"{self.n_free} free (n_blocks={self.n_blocks})")
+        del self._swapped[req_id]
+        table = self._tables.setdefault(req_id, [])
+        pairs: List[Tuple[int, int]] = []
+        for s in slots:
+            b = self._alloc_one()
+            table.append(b)
+            pairs.append((s, b))
+            self._host_free.append(s)
+        return pairs
+
+    def drop_swap(self, req_id: int) -> int:
+        """Abandon ``req_id``'s swapped bytes (request finished/cancelled
+        while on host, or the scheduler demoted it to recompute): returns
+        its host slots to the free pool without any device allocation.
+        Idempotent; returns the number of slots released."""
+        slots = self._swapped.pop(req_id, None)
+        if not slots:
+            return 0
+        self._host_free.extend(slots)
+        return len(slots)

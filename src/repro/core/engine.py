@@ -151,6 +151,34 @@ def _pad_pairs(pairs):
     return jnp.asarray(src), jnp.asarray(dst)
 
 
+def _gather_pool(cache, idx):
+    """Pull pool-block rows ``idx`` off every paged KV leaf (the device
+    half of a swap-OUT).  Non-pool leaves contribute zero-size stand-ins
+    so the result keeps the cache's tree structure — the host-arena
+    helpers walk both trees together."""
+    def pick(path, leaf):
+        lead, is_pool = _leaf_kind(path)
+        if is_pool:
+            return jnp.take(leaf, idx, axis=lead)
+        return jnp.zeros((0,), leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(pick, cache)
+
+
+def _scatter_pool(cache, rows, idx):
+    """Write gathered pool rows back into blocks ``idx`` (the device half
+    of a swap-IN; inverse of :func:`_gather_pool`).  Padded entries target
+    the reserved scratch block, same as copy-on-write padding."""
+    def put(path, leaf, row):
+        lead, is_pool = _leaf_kind(path)
+        if not is_pool:
+            return leaf
+        row = jnp.asarray(row, leaf.dtype)
+        return leaf.at[(slice(None),) * lead + (idx,)].set(row)
+
+    return jax.tree_util.tree_map_with_path(put, cache, rows)
+
+
 def _reset_slot(cache, slot):
     """Zero every slot-indexed cache leaf's row ``slot`` (-1 for integer
     leaves, which are ring-buffer position markers where -1 == empty).
@@ -243,7 +271,7 @@ class Engine:
                  sampling: SamplingParams = SamplingParams(),
                  seed: int = 0, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 watermark: float = 0.0,
+                 watermark: float = 0.0, host_blocks: int = 0,
                  block_manager: Optional[BlockManager] = None,
                  tp: int = 1, devices: Optional[Sequence] = None):
         self.cfg = cfg
@@ -266,7 +294,8 @@ class Engine:
                     # minus the max_len-long scratch row (now ONE block)
                     n_blocks = n_slots * (max_len // block_size) + 1
                 bm = BlockManager(n_blocks, block_size,
-                                  watermark=watermark)
+                                  watermark=watermark,
+                                  host_blocks=host_blocks)
             if max_len % bm.block_size:
                 raise ValueError("max_len must tile by the block size")
             self.block_manager = bm
@@ -300,6 +329,13 @@ class Engine:
         self._seed_cross = jax.jit(self.model.seed_cross_kv)
         self._reset_slot = jax.jit(_reset_slot)
         self._cow_blocks = jax.jit(_copy_blocks, donate_argnums=(0,))
+        # host KV swap tier: the numpy arena mirroring the pool leaves is
+        # built lazily on the first swap (shape [.., n_host_slots, ..] per
+        # pool leaf); gather/scatter are jitted with the same power-of-two
+        # padding as copy-on-write, so they compile O(log) shapes
+        self._host_pool = None
+        self._gather_pool = jax.jit(_gather_pool)
+        self._scatter_pool = jax.jit(_scatter_pool, donate_argnums=(0,))
         self.iterations = 0
 
     @property
@@ -400,6 +436,96 @@ class Engine:
             # leave leaves with propagated (not canonical) placements
             from repro import sharding as shd
             self.cache = shd.shard_cache(self.cfg, self.cache, self.tp_mesh)
+
+    # ------------------------------------------------------------- KV swap
+    def _host_pool_for(self, cache):
+        """A host (numpy) arena mirroring ``cache``'s pool leaves with the
+        block axis resized to the manager's host-slot count; non-pool
+        leaves are zero-size stand-ins so the tree walks line up with
+        :func:`_gather_pool` results."""
+        n = self.block_manager.n_host_slots
+
+        def mk(path, leaf):
+            lead, is_pool = _leaf_kind(path)
+            if not is_pool:
+                return np.zeros((0,), leaf.dtype)
+            shape = leaf.shape[:lead] + (n,) + leaf.shape[lead + 1:]
+            return np.zeros(shape, leaf.dtype)
+
+        return jax.tree_util.tree_map_with_path(mk, cache)
+
+    @staticmethod
+    def _arena_store(arena, rows, slots):
+        """Write the first ``len(slots)`` gathered rows into the arena's
+        host slots (rows beyond that are scratch-padding)."""
+        idx = np.asarray(slots, np.int64)
+
+        def wr(path, a, r):
+            lead, is_pool = _leaf_kind(path)
+            if is_pool:
+                sl = (slice(None),) * lead
+                a[sl + (idx,)] = r[sl + (slice(0, len(idx)),)]
+            return a
+
+        jax.tree_util.tree_map_with_path(wr, arena, rows)
+
+    @staticmethod
+    def _arena_fetch(arena, slots, n_pad):
+        """Read arena rows for ``slots``, zero-padded along the block axis
+        to ``n_pad`` (the padded scatter writes the zeros into the
+        reserved scratch block)."""
+        idx = np.asarray(slots, np.int64)
+
+        def rd(path, a):
+            lead, is_pool = _leaf_kind(path)
+            if not is_pool:
+                return a
+            sl = (slice(None),) * lead
+            rows = a[sl + (idx,)]
+            if n_pad > len(idx):
+                pad = list(rows.shape)
+                pad[lead] = n_pad - len(idx)
+                rows = np.concatenate(
+                    [rows, np.zeros(pad, a.dtype)], axis=lead)
+            return rows
+
+        return jax.tree_util.tree_map_with_path(rd, arena)
+
+    def _swap_out_one(self, cache, arena, pairs):
+        """Gather ``(device_block, host_slot)`` pairs' block contents off
+        one cache tree and store them in its arena."""
+        src, _ = _pad_pairs(pairs)
+        rows = jax.device_get(self._gather_pool(cache, src))
+        self._arena_store(arena, rows, [s for _, s in pairs])
+
+    def _swap_in_one(self, cache, arena, pairs):
+        """Stream ``(host_slot, device_block)`` pairs' contents from the
+        arena back into one cache tree; returns the updated tree."""
+        _, dst = _pad_pairs([(0, b) for _, b in pairs])
+        rows = self._arena_fetch(arena, [s for s, _ in pairs], len(dst))
+        return self._scatter_pool(cache, rows, dst)
+
+    def swap_out_blocks(self, pairs: Sequence[tuple]):
+        """Device->host move for :meth:`BlockManager.swap_out` pairs: the
+        named device blocks' KV contents land in the host arena rows.
+        Must run before any of those blocks is reallocated — the serving
+        loops call this synchronously inside the preemption hook."""
+        if not pairs:
+            return
+        if self._host_pool is None:
+            self._host_pool = self._host_pool_for(self.cache)
+        self._swap_out_one(self.cache, self._host_pool, pairs)
+
+    def swap_in_blocks(self, pairs: Sequence[tuple]):
+        """Host->device move for :meth:`BlockManager.swap_in` pairs,
+        before the resumed request's next chunk: restores the exact KV
+        bytes swapped out, so greedy outputs are bit-identical to never
+        having been preempted."""
+        if not pairs:
+            return
+        if self._host_pool is None:
+            self._host_pool = self._host_pool_for(self.cache)
+        self.cache = self._swap_in_one(self.cache, self._host_pool, pairs)
 
     # --------------------------------------------------------------- step
     def _step_impl(self, params, pk: PackedBatch, cache, key):

@@ -63,7 +63,7 @@ class PipelineEngine(Engine):
                  sampling: SamplingParams = SamplingParams(),
                  seed: int = 0, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 watermark: float = 0.0,
+                 watermark: float = 0.0, host_blocks: int = 0,
                  block_manager: Optional[BlockManager] = None,
                  tp: int = 1, devices: Optional[Sequence] = None):
         from repro.launch import pipeline as pl
@@ -75,6 +75,7 @@ class PipelineEngine(Engine):
                          dtype=dtype, sampling=sampling, seed=seed,
                          paged=paged, block_size=block_size,
                          n_blocks=n_blocks, watermark=watermark,
+                         host_blocks=host_blocks,
                          block_manager=block_manager)
         if self.model.needs_memory:
             raise NotImplementedError(
@@ -161,6 +162,28 @@ class PipelineEngine(Engine):
         src, dst = _pad_pairs(pairs)
         self.stage_caches = [self._cow_blocks(c, src, dst)
                              for c in self.stage_caches]
+
+    def swap_out_blocks(self, pairs: Sequence[tuple]):
+        # one engine-wide block id space, one host arena per stage: the
+        # same (device_block, host_slot) moves replay on every stage's
+        # pool slice (mirrors _apply_cow)
+        if not pairs:
+            return
+        if self._host_pool is None:
+            self._host_pool = [self._host_pool_for(c)
+                               for c in self.stage_caches]
+        for c, a in zip(self.stage_caches, self._host_pool):
+            self._swap_out_one(c, a, pairs)
+
+    def swap_in_blocks(self, pairs: Sequence[tuple]):
+        if not pairs:
+            return
+        if self._host_pool is None:
+            self._host_pool = [self._host_pool_for(c)
+                               for c in self.stage_caches]
+        self.stage_caches = [self._swap_in_one(c, a, pairs)
+                             for c, a in zip(self.stage_caches,
+                                             self._host_pool)]
 
     def extract_request(self, req_id: int) -> KVHandoff:
         """Per-stage extraction reassembled into the MONOLITHIC cache

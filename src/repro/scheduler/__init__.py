@@ -3,10 +3,11 @@ from repro.scheduler.policies import (POLICIES, OrcaScheduler,
                                       RequestLevelScheduler, SarathiScheduler,
                                       Scheduler)
 from repro.scheduler.budget import (BUDGETED_POLICIES, CHUNKED_POLICIES,
-                                    PREFIX_POLICIES, SarathiServeScheduler)
+                                    PREFIX_POLICIES, SWAP_POLICIES,
+                                    SarathiServeScheduler)
 from repro.scheduler.router import DisaggRouter
 
 __all__ = ["Request", "State", "Scheduler", "SarathiScheduler",
            "OrcaScheduler", "RequestLevelScheduler", "SarathiServeScheduler",
            "POLICIES", "CHUNKED_POLICIES", "BUDGETED_POLICIES",
-           "PREFIX_POLICIES", "DisaggRouter"]
+           "PREFIX_POLICIES", "SWAP_POLICIES", "DisaggRouter"]

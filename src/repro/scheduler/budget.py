@@ -47,6 +47,27 @@ fully executed by then, in both the sequential and pipelined serve loops
 — in-flight requests are stripped from ``running`` there), on finish
 (before the blocks are freed), and on preemption (the victim's blocks may
 outlive it in the cache, so a readmission re-hits instead of recomputing).
+
+Preemption policy (``preempt_mode``)
+------------------------------------
+What happens to a pool-pressure victim is selectable:
+
+* ``recompute`` (default) — discard KV, re-prefill prompt + outputs on
+  readmission (the PR 2 behaviour; the only option when the pool has no
+  host tier);
+* ``swap`` — move the victim's blocks to the BlockManager's host tier
+  (``swap_out_hook`` streams the bytes into the engine's host arena) and
+  stream them back at resume, before the victim's next chunk
+  (``swap_in_hook``).  Victims whose tables hold shared or prefix-pinned
+  blocks are not swappable and silently fall back to recompute;
+* ``hybrid`` — per victim, compare the PCIe round trip
+  (``2 * kv_swap_time`` over the whole block payload) against the
+  re-prefill cost (``chunked_prefill_total`` of the victim's context)
+  using the analytical cost model, and pick the cheaper restore path.
+
+All three produce bit-identical greedy outputs: swap restores the exact
+KV bytes recompute would regenerate — the policies differ only in clock
+time and pool traffic.
 """
 from __future__ import annotations
 
@@ -78,16 +99,26 @@ class SarathiServeScheduler(Scheduler):
         Optional :class:`repro.cache.PrefixCache` bound to
         ``block_manager``; enables cross-request KV reuse (see module
         docstring).  Greedy outputs are bit-identical with and without it.
+    preempt_mode:
+        ``recompute`` | ``swap`` | ``hybrid`` — what happens to a
+        pool-pressure victim (see module docstring).  Non-default modes
+        require a ``block_manager`` with host slots; ``hybrid``
+        additionally needs ``swap_cfg`` + ``swap_hw`` for the cost-model
+        comparison.
     """
 
     supports_time = True            # next_plan() accepts now= for gating
     supports_preempt = True         # next_plan() accepts preempt_hook=
+    supports_swap = True            # next_plan() accepts swap_*_hook=
+
+    PREEMPT_MODES = ("recompute", "swap", "hybrid")
 
     def __init__(self, *, n_slots: int, max_decodes: int, chunk_size: int,
                  token_budget: Optional[int] = None,
                  max_chunks_per_iter: Optional[int] = None,
                  admit_backoff: bool = True, block_manager=None,
-                 prefix_cache=None):
+                 prefix_cache=None, preempt_mode: str = "recompute",
+                 swap_cfg=None, swap_hw=None):
         super().__init__(n_slots=n_slots, max_decodes=max_decodes,
                          chunk_size=chunk_size, block_manager=block_manager)
         self.token_budget = int(token_budget if token_budget is not None
@@ -105,19 +136,65 @@ class SarathiServeScheduler(Scheduler):
         self.prefix_cache = prefix_cache
         self.n_prefix_hits = 0          # admissions that reused >=1 block
         self.n_cached_tokens = 0        # prefill tokens served from cache
+        if preempt_mode not in self.PREEMPT_MODES:
+            raise ValueError(f"preempt_mode must be one of "
+                             f"{self.PREEMPT_MODES}, got {preempt_mode!r}")
+        if preempt_mode != "recompute":
+            if block_manager is None:
+                raise ValueError(f"preempt_mode={preempt_mode!r} requires "
+                                 f"a block_manager")
+            if block_manager.n_host_slots == 0:
+                raise ValueError(f"preempt_mode={preempt_mode!r} requires "
+                                 f"a block_manager with host_blocks > 0")
+        if preempt_mode == "hybrid" and (swap_cfg is None
+                                         or swap_hw is None):
+            raise ValueError("preempt_mode='hybrid' needs swap_cfg and "
+                             "swap_hw for the cost-model comparison")
+        self.preempt_mode = preempt_mode
+        self.swap_cfg = swap_cfg
+        self.swap_hw = swap_hw
+        self.n_swap_outs = 0            # victims evicted by swap
+        self.n_swap_ins = 0             # swapped victims resumed
 
     # ------------------------------------------------------------- intake
-    def _admit(self, admit_hook=None, now: Optional[float] = None):
+    def _admit(self, admit_hook=None, now: Optional[float] = None,
+               swap_in_hook=None):
         if self.admit_backoff:
             n_dec = sum(1 for r in self.running if r.state == State.DECODING)
             if n_dec >= self.max_decodes:
                 return
         bm = self.block_manager
-        while self.waiting and len(self.running) < self.n_slots:
-            req = self.waiting[0]
+        i = 0
+        while i < len(self.waiting) and len(self.running) < self.n_slots:
+            req = self.waiting[i]
             # FCFS: a not-yet-arrived head blocks later arrivals too
             if now is not None and req.arrival_time > now:
                 break
+            if req.swapped:
+                # resume a swapped-out victim: rebuild its table from
+                # fresh device blocks and stream the host bytes back
+                # BEFORE its next chunk/decode can be planned.  An
+                # unresumable victim (device blocks still scarce) keeps
+                # its queue position but does NOT block later arrivals:
+                # its KV is parked on host, so free device blocks it
+                # cannot claim yet may as well admit fresh work — this
+                # is exactly how the swap tier sustains more resident
+                # requests than recompute at equal device HBM.  Resume
+                # demands the admission watermark on top of the table
+                # (anti-thrash), waived when nothing else is running —
+                # the victim must make progress eventually.
+                if not bm.can_swap_in(req.req_id,
+                                      watermark=bool(self.running)):
+                    i += 1
+                    continue
+                del self.waiting[i]
+                pairs = bm.swap_in(req.req_id)
+                req.swap_in()
+                self.running.append(req)
+                self.n_swap_ins += 1
+                if swap_in_hook:
+                    swap_in_hook(req, pairs)
+                continue
             if bm is not None:
                 # watermark-gated admission: the whole prefill must fit
                 # with headroom left for running requests' decode appends.
@@ -131,7 +208,7 @@ class SarathiServeScheduler(Scheduler):
                     # can NEVER be admitted at this pool geometry (vLLM's
                     # AllocStatus.NEVER): reject instead of wedging the
                     # FCFS queue behind an impossible head
-                    self.waiting.popleft()
+                    del self.waiting[i]
                     req.state = State.FINISHED
                     self.rejected.append(req)
                     continue
@@ -149,7 +226,7 @@ class SarathiServeScheduler(Scheduler):
                     need += 1
                 if not bm.can_allocate_blocks(need, watermark=fresh):
                     break
-            self.waiting.popleft()
+            del self.waiting[i]
             req.state = State.PREFILLING
             self.running.append(req)
             if bm is not None and hit_blocks:
@@ -194,20 +271,60 @@ class SarathiServeScheduler(Scheduler):
         self._commit_prefixes([req])
 
     # --------------------------------------------------------- preemption
-    def _preempt(self, victim: Request, preempt_hook=None):
-        """Evict ``victim`` for recompute: free its pool blocks, hand it to
-        the executor hook (slot release), and re-queue it at the head of
-        the waiting line (it keeps its FCFS arrival priority).  With a
-        prefix cache the victim's written full blocks are committed first
-        — they survive the free (cache-pinned), so its readmission
-        re-hits them instead of recomputing from scratch."""
+    def _swap_decision(self, victim: Request) -> bool:
+        """Should ``victim`` be evicted by swap (True) or recompute
+        (False)?  Decided BEFORE any prefix commit — committing would pin
+        the victim's blocks and make them unswappable.  ``hybrid``
+        charges the full PCIe round trip (out now + in at resume) against
+        re-prefilling the victim's context in this policy's chunks."""
+        if self.preempt_mode == "recompute":
+            return False
+        bm = self.block_manager
+        if not bm.can_swap_out(victim.req_id):
+            return False        # shared/pinned blocks or host tier full
+        if self.preempt_mode == "swap":
+            return True
+        from repro.sim.cost_model import (chunked_prefill_total,
+                                          kv_swap_bytes, kv_swap_time)
+        swap_t = 2.0 * kv_swap_time(
+            self.swap_hw, kv_swap_bytes(self.swap_cfg,
+                                        len(bm.table(victim.req_id)),
+                                        bm.block_size))
+        rec_t = chunked_prefill_total(self.swap_cfg, self.swap_hw,
+                                      victim.context_len, self.chunk_size)
+        return swap_t < rec_t
+
+    def _preempt(self, victim: Request, preempt_hook=None,
+                 swap_out_hook=None):
+        """Evict ``victim`` and re-queue it at the head of the waiting
+        line (it keeps its FCFS arrival priority).
+
+        Recompute path: free its pool blocks and hand it to the executor
+        hook (slot release); with a prefix cache the victim's written
+        full blocks are committed first — they survive the free
+        (cache-pinned), so its readmission re-hits them instead of
+        recomputing from scratch.
+
+        Swap path (``preempt_mode`` + :meth:`_swap_decision`): the blocks
+        move to the host tier instead — ``swap_out_hook(victim, pairs)``
+        streams the bytes into the engine's arena and releases the slot;
+        prefill/decode progress is preserved for :meth:`_admit`'s
+        resume."""
         self.running.remove(victim)
-        if self.block_manager is not None:
-            self._commit_prefixes([victim])
-            self.block_manager.free(victim.req_id)
-        if preempt_hook:
-            preempt_hook(victim)
-        victim.preempt()
+        bm = self.block_manager
+        if bm is not None and self._swap_decision(victim):
+            pairs = bm.swap_out(victim.req_id)
+            if swap_out_hook:
+                swap_out_hook(victim, pairs)
+            victim.swap_out()
+            self.n_swap_outs += 1
+        else:
+            if bm is not None:
+                self._commit_prefixes([victim])
+                bm.free(victim.req_id)
+            if preempt_hook:
+                preempt_hook(victim)
+            victim.preempt()
         self.waiting.appendleft(victim)
         self.n_preemptions += 1
 
@@ -221,13 +338,14 @@ class SarathiServeScheduler(Scheduler):
 
     # ------------------------------------------------------------- policy
     def next_plan(self, admit_hook=None, now: Optional[float] = None,
-                  preempt_hook=None) -> Optional[IterationPlan]:
+                  preempt_hook=None, swap_out_hook=None,
+                  swap_in_hook=None) -> Optional[IterationPlan]:
         # the previous plan has fully executed by now (the serve loops
         # only compose a new plan after results return; pipelined serving
         # strips in-flight requests from ``running`` first), so every
         # running request's written prefix is safe to index
         self._commit_prefixes(self.running)
-        self._admit(admit_hook, now)
+        self._admit(admit_hook, now, swap_in_hook)
         if not self.running:
             return None
         self.iteration += 1
@@ -260,10 +378,10 @@ class SarathiServeScheduler(Scheduler):
                                 f"KV pool too small for req {r.req_id} "
                                 f"alone (ctx={r.context_len}); grow "
                                 f"n_blocks")
-                        self._preempt(r, preempt_hook)
+                        self._preempt(r, preempt_hook, swap_out_hook)
                         preempted_self = True
                         break
-                    self._preempt(victim, preempt_hook)
+                    self._preempt(victim, preempt_hook, swap_out_hook)
                 if preempted_self:
                     continue
                 bm.ensure(r.req_id, need)
@@ -306,3 +424,7 @@ BUDGETED_POLICIES = frozenset({"sarathi_serve"})
 
 # policies whose constructor takes a prefix_cache (cross-request KV reuse)
 PREFIX_POLICIES = frozenset({"sarathi_serve"})
+
+# policies whose constructor takes preempt_mode/swap_cfg/swap_hw (host KV
+# swap tier; next_plan accepts swap_out_hook=/swap_in_hook=)
+SWAP_POLICIES = frozenset({"sarathi_serve"})

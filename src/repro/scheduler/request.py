@@ -40,6 +40,15 @@ class Request:
     # instead of prefill compute (cumulative across preemption re-hits)
     cached_tokens: int = 0
 
+    # preemption-by-swap (host KV tier, see repro.cache): the request's
+    # blocks live in the host arena; progress (prefilled/output) is kept,
+    # only the device residency is given up until swap_in.
+    swapped: bool = False
+    resume_state: Optional[State] = None     # state to restore on swap-in
+    n_swap_outs: int = 0
+    n_swap_ins: int = 0
+    swapped_tokens: int = 0                  # context moved to host overall
+
     # bookkeeping for metrics
     first_token_iter: Optional[int] = None
     finish_iter: Optional[int] = None
@@ -72,6 +81,27 @@ class Request:
         self.prefill_tokens = list(self.prompt) + list(self.output)
         self.prefilled = 0
         self.state = State.QUEUED
+
+    def swap_out(self):
+        """Evict this request by SWAP: the KV bytes move to the host tier
+        intact, so prefill progress survives — unlike :meth:`preempt`,
+        nothing re-enters the prefill queue beyond what was already
+        pending.  Resume (:meth:`swap_in`) restores the exact
+        pre-preemption state, which is why greedy outputs stay
+        bit-identical to the recompute policy."""
+        self.swapped_tokens += self.context_len
+        self.n_swap_outs += 1
+        self.n_preemptions += 1
+        self.swapped = True
+        self.resume_state = self.state
+        self.state = State.QUEUED
+
+    def swap_in(self):
+        """Undo :meth:`swap_out` once the blocks are back on device."""
+        self.n_swap_ins += 1
+        self.swapped = False
+        self.state = self.resume_state
+        self.resume_state = None
 
     @property
     def decode_position(self) -> int:

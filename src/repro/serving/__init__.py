@@ -7,9 +7,10 @@ from repro.serving.disagg import (DisaggResult, HandoffRecord, Replica,
 from repro.serving.metrics import (PipelineStats, RequestTrace,
                                    ServingSummary, Stat, format_table,
                                    percentile, summarize)
-from repro.serving.workload import (multiturn_workload, online_workload,
-                                    poisson_arrivals, shared_prefix_workload,
-                                    trace_arrivals, uniform_arrivals)
+from repro.serving.workload import (bursty_arrivals, multiturn_workload,
+                                    online_workload, poisson_arrivals,
+                                    shared_prefix_workload, trace_arrivals,
+                                    uniform_arrivals)
 
 __all__ = [
     "Server", "ServeResult", "IterationStats",
@@ -22,5 +23,6 @@ __all__ = [
     "RequestTrace", "ServingSummary", "Stat", "percentile", "summarize",
     "format_table",
     "online_workload", "shared_prefix_workload", "multiturn_workload",
-    "poisson_arrivals", "uniform_arrivals", "trace_arrivals",
+    "poisson_arrivals", "uniform_arrivals", "bursty_arrivals",
+    "trace_arrivals",
 ]

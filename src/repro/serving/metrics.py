@@ -48,6 +48,9 @@ class RequestTrace:
     recompute_tokens: int = 0               # context re-prefilled after them
     cached_tokens: int = 0                  # prefill tokens reused from the
     #                                         prefix cache (no compute paid)
+    n_swap_outs: int = 0                    # evictions served by the host
+    n_swap_ins: int = 0                     #   KV tier instead of recompute
+    swapped_tokens: int = 0                 # context moved over PCIe
 
     def mark_scheduled(self, t: float):
         if self.scheduled is None:
@@ -182,6 +185,10 @@ class ServingSummary:
     # prefix-cache reuse (zero when the cache is off)
     n_prefix_hits: int = 0          # requests that reused >= 1 cached block
     cached_tokens: int = 0          # prefill tokens served from cache
+    # host KV swap tier (zero under preempt_mode='recompute' / dense)
+    n_swap_outs: int = 0            # evictions that swapped instead
+    n_swap_ins: int = 0             # swapped victims streamed back
+    swapped_tokens: int = 0         # context tokens moved over PCIe
     # pipeline-parallel stage occupancy (zero for single-stage runs)
     pp: int = 1
     tp: int = 1
@@ -229,6 +236,9 @@ def summarize(traces: Iterable[RequestTrace],
         peak_pool_util=peak_pool_util,
         n_prefix_hits=sum(1 for t in traces if t.cached_tokens),
         cached_tokens=sum(t.cached_tokens for t in traces),
+        n_swap_outs=sum(t.n_swap_outs for t in traces),
+        n_swap_ins=sum(t.n_swap_ins for t in traces),
+        swapped_tokens=sum(t.swapped_tokens for t in traces),
         pp=pipeline.pp if pipeline is not None else 1,
         tp=(tp if tp is not None
             else pipeline.tp if pipeline is not None else 1),
@@ -254,6 +264,9 @@ def format_table(s: ServingSummary, unit: str = "s") -> str:
     if s.cached_tokens:
         out.append(f"prefix_hits={s.n_prefix_hits}/{s.n_requests} "
                    f"({s.hit_rate:.0%}) cached_tokens={s.cached_tokens}")
+    if s.n_swap_outs or s.n_swap_ins:
+        out.append(f"swap_outs={s.n_swap_outs} swap_ins={s.n_swap_ins} "
+                   f"swapped_tokens={s.swapped_tokens}")
     out += [
            f"{'metric':<12s} {'n':>5s} {'mean':>9s} {'p50':>9s} "
            f"{'p90':>9s} {'p99':>9s} {'max':>9s}   [{unit}]"]

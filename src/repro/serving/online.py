@@ -69,6 +69,22 @@ class EngineExecutor:
     def install(self, req: Request, handoff):
         self.engine.install_request(req.req_id, handoff)
 
+    def swap_out(self, req: Request, pairs, block_size: int) -> float:
+        """Stream the victim's blocks into the host arena, then free its
+        slot; returns the measured wall time (the loop's clock charge)."""
+        t0 = time.perf_counter()
+        self.engine.swap_out_blocks(pairs)
+        self.engine.release(req.req_id)
+        return time.perf_counter() - t0
+
+    def swap_in(self, req: Request, pairs, block_size: int) -> float:
+        """Re-seat the resumed victim (fresh slot) and stream its blocks
+        back from the arena; returns the measured wall time."""
+        t0 = time.perf_counter()
+        self.engine.add_request(req.req_id, memory=req.memory)
+        self.engine.swap_in_blocks(pairs)
+        return time.perf_counter() - t0
+
     def __call__(self, plan: IterationPlan) -> Tuple[Dict[int, int], float]:
         t0 = time.perf_counter()
         tokens = self.engine.execute(plan)
@@ -113,6 +129,19 @@ class CostModelExecutor:
     def install(self, req: Request, handoff):
         pass
 
+    def _swap_time(self, pairs, block_size: int) -> float:
+        from repro.sim.cost_model import kv_swap_bytes, kv_swap_time
+        return kv_swap_time(self.hw, kv_swap_bytes(self.cfg, len(pairs),
+                                                   block_size))
+
+    def swap_out(self, req: Request, pairs, block_size: int) -> float:
+        """Modelled PCIe time of moving the victim's blocks to host —
+        the :func:`repro.sim.cost_model.kv_swap_time` clock charge."""
+        return self._swap_time(pairs, block_size)
+
+    def swap_in(self, req: Request, pairs, block_size: int) -> float:
+        return self._swap_time(pairs, block_size)
+
     def __call__(self, plan: IterationPlan) -> Tuple[Dict[int, int], float]:
         from repro.sim.pipeline import plan_time
         dt = plan_time(self.cfg, self.hw, plan, n_chips=self.n_chips,
@@ -133,6 +162,7 @@ class IterationRecord:
     n_decode_tokens: int
     pool_blocks_used: int = 0          # paged KV pool occupancy (0 = dense)
     pool_blocks_total: int = 0
+    n_resident: int = 0                # requests holding KV (device + host)
 
 
 @dataclass
@@ -144,12 +174,23 @@ class OnlineResult:
     n_preemptions: int = 0
     pipeline: Optional[PipelineStats] = None   # set by the pipelined loop
     tp: int = 1                                # engine TP degree
+    # host KV swap tier traffic (zero under preempt_mode='recompute')
+    n_swap_outs: int = 0
+    n_swap_ins: int = 0
+    kv_swap_time: float = 0.0                  # total clock time on PCIe
 
     @property
     def peak_pool_util(self) -> float:
         return max((i.pool_blocks_used / i.pool_blocks_total
                     for i in self.iterations if i.pool_blocks_total),
                    default=0.0)
+
+    @property
+    def peak_resident(self) -> int:
+        """Most requests concurrently holding live KV state (on device or
+        swapped to host) in any iteration — the capacity metric the swap
+        tier multiplies past HBM."""
+        return max((i.n_resident for i in self.iterations), default=0)
 
     @property
     def mean_pool_util(self) -> float:
@@ -192,6 +233,9 @@ def serve_online(scheduler: Scheduler, executor,
         tr.n_preemptions = req.n_preemptions
         tr.recompute_tokens = req.recompute_tokens
         tr.cached_tokens = req.cached_tokens
+        tr.n_swap_outs = req.n_swap_outs
+        tr.n_swap_ins = req.n_swap_ins
+        tr.swapped_tokens = req.swapped_tokens
         result.outputs[req.req_id] = list(req.output)
 
     def preempt(req: Request):
@@ -203,6 +247,29 @@ def serve_online(scheduler: Scheduler, executor,
         tr.n_preemptions += 1
         tr.recompute_tokens += req.context_len   # what recompute will redo
 
+    # host-swap hooks: the executor moves the bytes (or models the PCIe
+    # time) and the charge lands on the clock before the next iteration —
+    # resume streams blocks back before the victim's next chunk runs
+    swap_charge = [0.0]
+
+    def swap_out(req: Request, pairs):
+        dt = executor.swap_out(req, pairs, bm.block_size)
+        swap_charge[0] += dt
+        result.n_swap_outs += 1
+        result.n_preemptions += 1
+        result.kv_swap_time += dt
+        tr = traces[req.req_id]
+        tr.n_preemptions += 1
+        tr.n_swap_outs += 1
+        tr.swapped_tokens += req.context_len
+
+    def swap_in(req: Request, pairs):
+        dt = executor.swap_in(req, pairs, bm.block_size)
+        swap_charge[0] += dt
+        result.n_swap_ins += 1
+        result.kv_swap_time += dt
+        traces[req.req_id].n_swap_ins += 1
+
     for _ in range(max_iterations):
         while pending and pending[0].arrival_time <= clock:
             scheduler.submit(pending.pop(0))
@@ -211,7 +278,13 @@ def serve_online(scheduler: Scheduler, executor,
         kwargs = {"now": clock} if passes_now else {}
         if getattr(scheduler, "supports_preempt", False):
             kwargs["preempt_hook"] = preempt
+        if getattr(scheduler, "supports_swap", False):
+            kwargs["swap_out_hook"] = swap_out
+            kwargs["swap_in_hook"] = swap_in
         plan = scheduler.next_plan(admit_hook=executor.admit, **kwargs)
+        if swap_charge[0]:
+            clock += swap_charge[0]
+            swap_charge[0] = 0.0
         # requests the scheduler rejected as unservable at this pool
         # geometry terminate with no output (vLLM's "ignored" requests)
         for req in getattr(scheduler, "rejected", [])[n_rejected:]:
@@ -237,7 +310,10 @@ def serve_online(scheduler: Scheduler, executor,
         result.iterations.append(IterationRecord(
             t0, dt, plan.n_prefill_tokens, plan.n_decode_tokens,
             pool_blocks_used=bm.n_used if bm is not None else 0,
-            pool_blocks_total=bm.n_usable if bm is not None else 0))
+            pool_blocks_total=bm.n_usable if bm is not None else 0,
+            n_resident=len(scheduler.running)
+            + sum(1 for r in scheduler.waiting
+                  if getattr(r, "swapped", False))))
         scheduler.on_tokens(tokens, release_hook=release)
     result.makespan = clock
     return result
@@ -289,6 +365,9 @@ def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
         tr.n_preemptions = req.n_preemptions
         tr.recompute_tokens = req.recompute_tokens
         tr.cached_tokens = req.cached_tokens
+        tr.n_swap_outs = req.n_swap_outs
+        tr.n_swap_ins = req.n_swap_ins
+        tr.swapped_tokens = req.swapped_tokens
         result.outputs[req.req_id] = list(req.output)
 
     def preempt(req: Request):
@@ -297,6 +376,35 @@ def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
         tr = traces[req.req_id]
         tr.n_preemptions += 1
         tr.recompute_tokens += req.context_len
+
+    # host-swap hooks: per-stage arena moves, measured on the wall clock
+    # and charged as head-of-pipeline delay (the PCIe stream must finish
+    # before the resumed victim's next micro-batch is injected)
+    swap_charge = [0.0]
+
+    def swap_out(req: Request, pairs):
+        t0 = time.perf_counter()
+        engine.swap_out_blocks(pairs)
+        engine.release(req.req_id)
+        dt = time.perf_counter() - t0
+        swap_charge[0] += dt
+        result.n_swap_outs += 1
+        result.n_preemptions += 1
+        result.kv_swap_time += dt
+        tr = traces[req.req_id]
+        tr.n_preemptions += 1
+        tr.n_swap_outs += 1
+        tr.swapped_tokens += req.context_len
+
+    def swap_in(req: Request, pairs):
+        t0 = time.perf_counter()
+        engine.add_request(req.req_id, memory=req.memory)
+        engine.swap_in_blocks(pairs)
+        dt = time.perf_counter() - t0
+        swap_charge[0] += dt
+        result.n_swap_ins += 1
+        result.kv_swap_time += dt
+        traces[req.req_id].n_swap_ins += 1
 
     for _ in range(max_iterations):
         now = stats.stage_free[0]           # next injection opportunity
@@ -316,11 +424,18 @@ def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
         kwargs = {"now": now} if passes_now else {}
         if getattr(scheduler, "supports_preempt", False):
             kwargs["preempt_hook"] = preempt
+        if getattr(scheduler, "supports_swap", False):
+            kwargs["swap_out_hook"] = swap_out
+            kwargs["swap_in_hook"] = swap_in
         try:
             plan = scheduler.next_plan(admit_hook=admit, **kwargs)
         finally:
             scheduler.n_slots += len(hidden)
             scheduler.running.extend(hidden)
+        if swap_charge[0]:
+            stats.advance_head(now + swap_charge[0])
+            now = stats.stage_free[0]
+            swap_charge[0] = 0.0
         for req in getattr(scheduler, "rejected", [])[n_rejected:]:
             traces[req.req_id].finish = now
             result.outputs[req.req_id] = []
@@ -358,7 +473,10 @@ def serve_online_pipelined(scheduler: Scheduler, engine: PipelineEngine,
         result.iterations.append(IterationRecord(
             now, drain - now, plan.n_prefill_tokens, plan.n_decode_tokens,
             pool_blocks_used=bm.n_used if bm is not None else 0,
-            pool_blocks_total=bm.n_usable if bm is not None else 0))
+            pool_blocks_total=bm.n_usable if bm is not None else 0,
+            n_resident=len(scheduler.running)
+            + sum(1 for r in scheduler.waiting
+                  if getattr(r, "swapped", False))))
         scheduler.on_tokens(tokens, release_hook=release)
     result.makespan = stats.makespan
     return result
@@ -388,7 +506,9 @@ class OnlineServer:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  policy_kwargs: Optional[dict] = None, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 watermark: float = 0.0, pp: int = 1, tp: int = 1,
+                 watermark: float = 0.0, host_blocks: int = 0,
+                 preempt_mode: str = "recompute", swap_hw=None,
+                 pp: int = 1, tp: int = 1,
                  devices=None, max_decodes: Optional[int] = None,
                  force_pipeline: bool = False, prefix_cache: bool = False):
         from repro.serving.server import build_engine_and_scheduler
@@ -400,8 +520,10 @@ class OnlineServer:
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, policy_kwargs=policy_kwargs, paged=paged,
             block_size=block_size, n_blocks=n_blocks, watermark=watermark,
-            pp=pp, tp=tp, devices=devices, max_decodes=max_decodes,
-            force_pipeline=force_pipeline, prefix_cache=prefix_cache)
+            host_blocks=host_blocks, preempt_mode=preempt_mode,
+            swap_hw=swap_hw, pp=pp, tp=tp, devices=devices,
+            max_decodes=max_decodes, force_pipeline=force_pipeline,
+            prefix_cache=prefix_cache)
         self.executor = EngineExecutor(self.engine)
 
     def run(self, requests: Sequence[Request], *, warmup: bool = True,

@@ -17,7 +17,8 @@ from repro.core.engine import Engine
 from repro.core.pipeline_engine import PipelineEngine
 from repro.core.sampling import SamplingParams
 from repro.scheduler import (BUDGETED_POLICIES, CHUNKED_POLICIES,
-                             PREFIX_POLICIES, POLICIES, Request)
+                             PREFIX_POLICIES, POLICIES, SWAP_POLICIES,
+                             Request)
 
 
 def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
@@ -34,7 +35,10 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                tp: int = 1, devices=None,
                                max_decodes: Optional[int] = None,
                                force_pipeline: bool = False,
-                               prefix_cache: bool = False):
+                               prefix_cache: bool = False,
+                               host_blocks: int = 0,
+                               preempt_mode: str = "recompute",
+                               swap_hw=None):
     """Shared construction for the offline Server and OnlineServer.
 
     Orca / request-level submit whole prompts as one 'chunk', so their
@@ -75,6 +79,20 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     pool cannot share, so reuse there would be silently wrong.  Greedy
     outputs are bit-identical with the cache on vs off.
 
+    ``host_blocks > 0`` gives the paged pool a host-RAM swap tier of that
+    many block-sized slots, and ``preempt_mode`` picks what the scheduler
+    does to pool-pressure victims: ``"recompute"`` (drop KV, re-prefill on
+    resume — the default, and the only choice for dense caches),
+    ``"swap"`` (stream the victim's blocks to host over PCIe, stream them
+    back before its next chunk), or ``"hybrid"`` (per victim, charge
+    ``repro.sim.kv_swap_time`` for the round-trip vs the chunked
+    re-prefill cost under ``swap_hw`` — default A100 — and take the
+    cheaper).  Swap restores the exact KV bytes recompute would
+    regenerate, so greedy outputs are bit-identical across all three
+    modes.  Requires ``paged=True``, a swap-aware policy, and pure
+    paged-attention layer kinds (same restriction as ``prefix_cache``:
+    slot-indexed state cannot move through the block pool).
+
     ``max_decodes`` caps the decodes the SCHEDULER piggybacks per
     iteration (default: every decoding request, ``n_slots - 1``).  With a
     pipelined engine a smaller cap (~``n_slots / pp``) spreads the
@@ -91,7 +109,7 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                decode_slots=max(n_slots - 1, 1), dtype=dtype,
                sampling=sampling, seed=seed, paged=paged,
                block_size=block_size, n_blocks=n_blocks,
-               watermark=watermark)
+               watermark=watermark, host_blocks=host_blocks)
     if pp > 1 or force_pipeline:
         engine = PipelineEngine(cfg, params, pp=pp, tp=tp, devices=devices,
                                 **ekw)
@@ -122,6 +140,31 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                 f"{cfg.name} has slot-state kinds {sorted(set(bad))} whose "
                 f"per-request history the block pool cannot share")
         kw["prefix_cache"] = PrefixCache(engine.block_manager)
+    if preempt_mode != "recompute":
+        if policy not in SWAP_POLICIES:
+            raise ValueError(f"preempt_mode={preempt_mode!r} is only "
+                             f"supported by {sorted(SWAP_POLICIES)}, "
+                             f"not {policy!r}")
+        if engine.block_manager is None:
+            raise ValueError("preempt_mode != 'recompute' requires "
+                             "paged=True")
+        if host_blocks <= 0:
+            raise ValueError("preempt_mode != 'recompute' requires "
+                             "host_blocks > 0 (the host swap tier)")
+        from repro.models import stack
+        group_kinds, _, tail_kinds = stack.group_split(cfg)
+        bad = [k for k in (*group_kinds, *tail_kinds)
+               if k not in ("dense", "moe")]
+        if bad:
+            raise ValueError(
+                f"KV swap requires pure paged-attention layers; "
+                f"{cfg.name} has slot-state kinds {sorted(set(bad))} whose "
+                f"per-request history lives outside the block pool")
+        kw["preempt_mode"] = preempt_mode
+        if preempt_mode == "hybrid":
+            from repro.sim import A100
+            kw["swap_cfg"] = cfg
+            kw["swap_hw"] = swap_hw if swap_hw is not None else A100
     if token_budget is not None:
         if policy not in BUDGETED_POLICIES:
             raise ValueError(f"token_budget is only supported by "
@@ -168,7 +211,8 @@ class Server:
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None, watermark: float = 0.0,
                  pp: int = 1, tp: int = 1, devices=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, host_blocks: int = 0,
+                 preempt_mode: str = "recompute", swap_hw=None):
         self.cfg = cfg
         self.policy_name = policy
         self.engine, self.scheduler = build_engine_and_scheduler(
@@ -177,7 +221,9 @@ class Server:
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, paged=paged, block_size=block_size,
             n_blocks=n_blocks, watermark=watermark, pp=pp, tp=tp,
-            devices=devices, prefix_cache=prefix_cache)
+            devices=devices, prefix_cache=prefix_cache,
+            host_blocks=host_blocks, preempt_mode=preempt_mode,
+            swap_hw=swap_hw)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 100_000) -> ServeResult:
@@ -196,6 +242,17 @@ class Server:
         if getattr(self.scheduler, "supports_preempt", False):
             kwargs["preempt_hook"] = \
                 lambda req: self.engine.release(req.req_id)
+        if getattr(self.scheduler, "supports_swap", False):
+            def swap_out(req: Request, pairs):
+                self.engine.swap_out_blocks(pairs)
+                self.engine.release(req.req_id)
+
+            def swap_in(req: Request, pairs):
+                self.engine.add_request(req.req_id, memory=req.memory)
+                self.engine.swap_in_blocks(pairs)
+
+            kwargs["swap_out_hook"] = swap_out
+            kwargs["swap_in_hook"] = swap_in
 
         it = 0
         n_rejected = 0

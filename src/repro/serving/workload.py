@@ -6,6 +6,9 @@ P:D split — :func:`repro.data.serving_workload`) with an arrival process:
 * ``poisson`` — open-loop Poisson arrivals at ``rate`` req/s (the standard
   serving-benchmark assumption; exponential inter-arrival gaps);
 * ``uniform`` — deterministic, evenly spaced at ``rate`` req/s;
+* ``bursty`` — Poisson-spaced bursts of ``burst`` simultaneous requests
+  (mean rate preserved): the pool-pressure pattern that exercises
+  preemption, and with a host KV tier, the swap path;
 * an explicit trace of arrival times (replay of a recorded workload).
 
 Prefix-reuse traffic (what ``benchmarks/prefix.py`` sweeps) comes from two
@@ -37,6 +40,22 @@ def poisson_arrivals(n: int, rate: float, seed=0) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
 
 
+def bursty_arrivals(n: int, rate: float, burst: int = 4,
+                    seed=0) -> np.ndarray:
+    """n arrival times in Poisson-spaced bursts of ``burst`` simultaneous
+    requests.  The burst process runs at ``rate / burst`` bursts/s, so the
+    mean request rate stays ``rate`` — only the variance moves.  Bursts
+    are what drive a paged pool into preemption: ``burst`` prompts land
+    at once, the pool overcommits, and victims must recompute or swap."""
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    if burst < 1:
+        raise ValueError("burst must be >= 1")
+    n_bursts = -(-n // burst)
+    starts = poisson_arrivals(n_bursts, rate / burst, seed=seed)
+    return np.repeat(starts, burst)[:n]
+
+
 def uniform_arrivals(n: int, rate: float) -> np.ndarray:
     """n deterministic arrivals evenly spaced at ``rate`` req/s."""
     if rate <= 0:
@@ -55,7 +74,7 @@ def trace_arrivals(times: Sequence[float]) -> np.ndarray:
 
 
 def online_workload(n_requests: int, *, rate: float = 1.0,
-                    arrival: str = "poisson",
+                    arrival: str = "poisson", burst: int = 4,
                     trace: Optional[Sequence[float]] = None,
                     pd_ratio: float = 8.0, min_len: int = 16,
                     max_len: int = 64, theta: float = 0.4,
@@ -74,6 +93,8 @@ def online_workload(n_requests: int, *, rate: float = 1.0,
                              f"{n_requests} requests")
     elif arrival == "poisson":
         times = poisson_arrivals(n_requests, rate, seed=a_seed)
+    elif arrival == "bursty":
+        times = bursty_arrivals(n_requests, rate, burst=burst, seed=a_seed)
     elif arrival == "uniform":
         times = uniform_arrivals(n_requests, rate)
     else:

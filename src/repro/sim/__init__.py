@@ -2,7 +2,8 @@ from repro.sim.hardware import A100, A6000, PROFILES, TPU_V5E, Hardware
 from repro.sim.cost_model import (BatchSpec, CostBreakdown, DecodeSeg,
                                   PrefillSeg, chunked_prefill_total,
                                   decode_time, hybrid_time, iteration_time,
-                                  kv_handoff_bytes, kv_transfer_time,
+                                  kv_handoff_bytes, kv_swap_bytes,
+                                  kv_swap_time, kv_transfer_time,
                                   prefill_time, tp_allreduce_time)
 from repro.sim.pipeline import (PipelineResult, plan_time, plan_to_spec,
                                 simulate_pipeline)
@@ -12,5 +13,6 @@ __all__ = [
     "PrefillSeg", "DecodeSeg", "CostBreakdown", "iteration_time",
     "prefill_time", "decode_time", "hybrid_time", "chunked_prefill_total",
     "tp_allreduce_time", "kv_transfer_time", "kv_handoff_bytes",
+    "kv_swap_time", "kv_swap_bytes",
     "PipelineResult", "simulate_pipeline", "plan_to_spec", "plan_time",
 ]

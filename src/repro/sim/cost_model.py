@@ -101,6 +101,28 @@ def kv_handoff_bytes(cfg, n_tokens: int, dtype_bytes: int = BYTES) -> float:
     return float(n_tokens) * cfg.kv_bytes_per_token(dtype_bytes)
 
 
+def kv_swap_time(hw: Hardware, n_bytes: float) -> float:
+    """Move ``n_bytes`` of KV cache between device HBM and host RAM over
+    PCIe — the swap-tier sibling of :func:`kv_transfer_time` (which models
+    the inter-chip link): one directional stream at ``hw.pcie_bw`` plus one
+    launch overhead.  Charged on the virtual clock once per swap-out and
+    once per swap-in; the hybrid preemption policy compares the round trip
+    (2x this) against :func:`chunked_prefill_total` per victim."""
+    if n_bytes <= 0:
+        return 0.0
+    return n_bytes / hw.pcie_bw + hw.kernel_overhead
+
+
+def kv_swap_bytes(cfg, n_blocks: int, block_size: int,
+                  dtype_bytes: int = BYTES) -> float:
+    """Payload of swapping ``n_blocks`` KV-pool blocks: PCIe moves whole
+    blocks, so a partially written tail block still costs ``block_size``
+    tokens of bandwidth (internal fragmentation is paid, unlike the
+    token-granular :func:`kv_handoff_bytes`)."""
+    return kv_handoff_bytes(cfg, int(n_blocks) * int(block_size),
+                            dtype_bytes)
+
+
 def _attention_time(hw: Hardware, n_q: int, n_kv: int, n_heads: int,
                     n_kv_heads: int, head_dim: int) -> float:
     """Score + AV for n_q query tokens against n_kv cached tokens."""

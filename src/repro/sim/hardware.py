@@ -21,6 +21,10 @@ class Hardware:
     kernel_overhead: float = 5e-6  # fixed per-op launch/dispatch cost (s)
     tile: int = 128              # matmul tile (thread-block tile / MXU edge)
     hbm_capacity: float = 80e9   # bytes of device memory per chip
+    # host<->device bandwidth for the KV swap tier (PCIe 4.0 x16 effective
+    # ~25-28 GB/s; we charge the nominal 32 GB/s direction rate and let
+    # kernel_overhead absorb the per-transfer setup)
+    pcie_bw: float = 32e9        # bytes/s host<->device, per direction
 
     @property
     def flops_per_byte(self) -> float:
