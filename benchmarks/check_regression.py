@@ -44,16 +44,17 @@ import sys
 BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 
 # benches whose rows come from deterministic models (serving cost model;
-# the roofline paged-kernel bandwidth table) — machine-independent, so a
-# metric drop is a real regression
-GATED_BENCHES = {"latency_sweep", "memory_sweep", "roofline_kernels"}
+# the roofline paged-kernel bandwidth table; the tp x sp sequence-parallel
+# cost table) — machine-independent, so a metric drop is a real regression
+GATED_BENCHES = {"latency_sweep", "memory_sweep", "roofline_kernels",
+                 "roofline_sp"}
 # wall-clock benches whose numbers are machine-dependent: only their sweep
 # SHAPE is pinned — the listed identity fields per row must match the
 # baseline exactly (a changed grid means the baseline needs --update), but
 # no metric is gated.  This keeps the committed tp x pp grid and the
 # disaggregation mode grid honest without gating on runner timing noise.
 IDENTITY_BENCHES = {
-    "pipeline_bubbles": ("mode", "policy", "pp", "tp"),
+    "pipeline_bubbles": ("mode", "policy", "pp", "tp", "sp"),
     "disagg_modes": ("mode", "n_prefill", "n_decode", "tp"),
     # prefix.py gates its own deterministic columns (monotone prefill/TTFT
     # + bit-identity vs cache-off) and exits non-zero itself; here only

@@ -41,6 +41,14 @@ couples TP degree to bubble size.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python -m benchmarks.pipeline --pp 2 --tp 2
 
+``--sp`` (with ``--tp >= 2``) adds a sequence-parallel twin row per mode:
+the measured engine keeps the residual stream token-sharded through the
+norm + residual regions (``sp=1`` column), and the sim charges the
+reduce-scatter/all-gather pair with the "others" term sharded by ``tp``.
+The ``activation_bytes`` (measured engine lane geometry) and
+``predicted_others_time`` columns must drop strictly versus the ``sp=0``
+twin — asserted in-tool and identity-pinned via ``check_regression``.
+
 ``--pp 1`` is accepted as the no-pipeline baseline column: the workload
 runs through the degenerate one-stage pipeline engine (bit-identical to
 the plain engine; the sim's pp=1 likewise charges no inter-stage
@@ -57,9 +65,11 @@ import sys
 
 from benchmarks.latency import write_bench_json
 
-ROW_FIELDS = ("mode", "policy", "pp", "tp", "measured_bubble_fraction",
-              "predicted_bubble_fraction", "predicted_collective_fraction",
-              "measured_makespan", "n_microbatches", "throughput", "p99_tbt")
+ROW_FIELDS = ("mode", "policy", "pp", "tp", "sp",
+              "measured_bubble_fraction", "predicted_bubble_fraction",
+              "predicted_collective_fraction", "activation_bytes",
+              "predicted_others_time", "measured_makespan",
+              "n_microbatches", "throughput", "p99_tbt")
 
 
 def bimodal_workload(n, *, vocab_size, seed, chat_len=(16, 32),
@@ -104,6 +114,11 @@ def main(argv=None) -> None:
     ap.add_argument("--doc-max", type=int, default=512)
     ap.add_argument("--paged", action="store_true",
                     help="run the measured engine on the paged KV pool")
+    ap.add_argument("--sp", action="store_true",
+                    help="additionally run every mode sequence-parallel "
+                         "(requires --tp >= 2): each (mode, policy) row "
+                         "gets an sp=1 twin whose activation_bytes and "
+                         "predicted_others_time must drop")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="BENCH_pipeline.json",
                     help="machine-readable artifact path ('' disables)")
@@ -122,11 +137,16 @@ def main(argv=None) -> None:
     from repro.models import build_model
     from repro.scheduler import POLICIES
     from repro.serving import OnlineServer
+    from repro.sim.cost_model import (BatchSpec, DecodeSeg, PrefillSeg,
+                                      iteration_time)
     from repro.sim.hardware import PROFILES
     from repro.sim.pipeline import simulate_pipeline
 
     if args.pp < 1:
         ap.error("--pp must be >= 1")
+    if args.sp and args.tp < 2:
+        ap.error("--sp needs --tp >= 2 (sequence parallelism shards the "
+                 "token axis over the tp chips)")
     if args.hw.lower() not in PROFILES:
         ap.error(f"unknown --hw {args.hw!r}; have {sorted(PROFILES)}")
     hw = PROFILES[args.hw.lower()]
@@ -157,53 +177,88 @@ def main(argv=None) -> None:
     # (§5.3 composition)
     max_decodes = max(args.slots // args.pp - 1, 1)
 
+    def predicted_others(sp: bool) -> float:
+        """Modelled non-matmul ("others": norms, residual adds, glue) time
+        of one representative decode-maximal hybrid iteration at PAPER
+        scale — the term sequence parallelism shards by ``tp``."""
+        spec = BatchSpec(
+            prefills=(PrefillSeg(args.chunk, args.doc_max // 2),),
+            decodes=(DecodeSeg(max_decodes, args.doc_max // 2),),
+            fused=True)
+        bd = iteration_time(full_cfg, hw, spec, n_chips=args.tp, sp=sp)
+        return bd.others
+
     print(",".join(ROW_FIELDS))
     rows = []
     measured = {}
+    sp_legs = [False, True] if args.sp else [False]
     for mode, policy in [("chunked", "sarathi_serve"),
                          ("unchunked", "orca")]:
-        # decode-maximal composition: ONE chunk per micro-batch (multi-
-        # chunk budget plans would run as several C-wide sub-steps and
-        # break the uniform-duration property §5.3 relies on); the decode
-        # cap is per-micro-batch, not per-engine, so backoff is off
-        pkw = ({"admit_backoff": False, "max_chunks_per_iter": 1}
-               if policy == "sarathi_serve" else None)
-        # --pp 1 still serves through the (degenerate, bit-identical)
-        # one-stage pipeline engine so the measured column exists: it is
-        # the in-tool no-pipeline reference point for the bubble numbers
-        # (sim's pp=1 likewise charges no inter-stage transfer)
-        srv = OnlineServer(cfg, params, policy=policy,
-                           chunk_size=args.chunk, n_slots=args.slots,
-                           max_len=max_len, max_prompt_len=args.doc_max,
-                           pp=args.pp, tp=args.tp, paged=args.paged,
-                           seed=args.seed, max_decodes=max_decodes,
-                           policy_kwargs=pkw,
-                           force_pipeline=(args.pp == 1))
-        res = srv.run(workload())
-        s = res.summary()
-        # discrete-event prediction: same schedule at PAPER scale, same TP
-        # degree — the sim charges the per-layer all-reduce term, so the
-        # predicted column carries the bubble x TP-collective interaction
-        kw = dict(n_slots=args.slots, max_decodes=max_decodes,
-                  chunk_size=args.chunk, **(pkw or {}))
-        sched = POLICIES[policy](**kw)
-        for r in workload():
-            sched.submit(r)
-        sim = simulate_pipeline(full_cfg, hw, sched, pp=args.pp, tp=args.tp)
-        predicted = (sim.total_bubble / (args.pp * sim.makespan)
-                     if sim.makespan > 0 else 0.0)
-        st = res.pipeline
-        measured[mode] = st.bubble_fraction
-        row = dict(mode=mode, policy=policy, pp=args.pp, tp=args.tp,
-                   measured_bubble_fraction=st.bubble_fraction,
-                   predicted_bubble_fraction=predicted,
-                   predicted_collective_fraction=sim.collective_fraction,
-                   measured_makespan=st.makespan,
-                   n_microbatches=st.n_microbatches,
-                   throughput=s.throughput, p99_tbt=s.tbt.p99)
-        rows.append(row)
-        print(",".join(f"{row[f]:.6g}" if isinstance(row[f], float)
-                       else str(row[f]) for f in ROW_FIELDS))
+        for sp in sp_legs:
+            # decode-maximal composition: ONE chunk per micro-batch (multi-
+            # chunk budget plans would run as several C-wide sub-steps and
+            # break the uniform-duration property §5.3 relies on); the
+            # decode cap is per-micro-batch, not per-engine, so backoff is
+            # off
+            pkw = ({"admit_backoff": False, "max_chunks_per_iter": 1}
+                   if policy == "sarathi_serve" else None)
+            # --pp 1 still serves through the (degenerate, bit-identical)
+            # one-stage pipeline engine so the measured column exists: it
+            # is the in-tool no-pipeline reference point for the bubble
+            # numbers (sim's pp=1 likewise charges no inter-stage transfer)
+            srv = OnlineServer(cfg, params, policy=policy,
+                               chunk_size=args.chunk, n_slots=args.slots,
+                               max_len=max_len, max_prompt_len=args.doc_max,
+                               pp=args.pp, tp=args.tp, sp=sp,
+                               paged=args.paged,
+                               seed=args.seed, max_decodes=max_decodes,
+                               policy_kwargs=pkw,
+                               force_pipeline=(args.pp == 1))
+            act_bytes = srv.engine.activation_bytes_per_iteration()
+            res = srv.run(workload())
+            s = res.summary()
+            # discrete-event prediction: same schedule at PAPER scale,
+            # same TP degree — the sim charges the per-layer collective
+            # term (all-reduce, or the RS/AG pair under --sp), so the
+            # predicted column carries the bubble x collective interaction
+            kw = dict(n_slots=args.slots, max_decodes=max_decodes,
+                      chunk_size=args.chunk, **(pkw or {}))
+            sched = POLICIES[policy](**kw)
+            for r in workload():
+                sched.submit(r)
+            sim = simulate_pipeline(full_cfg, hw, sched, pp=args.pp,
+                                    tp=args.tp, sp=sp)
+            predicted = (sim.total_bubble / (args.pp * sim.makespan)
+                         if sim.makespan > 0 else 0.0)
+            st = res.pipeline
+            measured[(mode, sp)] = st.bubble_fraction
+            row = dict(mode=mode, policy=policy, pp=args.pp, tp=args.tp,
+                       sp=int(sp),
+                       measured_bubble_fraction=st.bubble_fraction,
+                       predicted_bubble_fraction=predicted,
+                       predicted_collective_fraction=sim.collective_fraction,
+                       activation_bytes=act_bytes,
+                       predicted_others_time=predicted_others(sp),
+                       measured_makespan=st.makespan,
+                       n_microbatches=st.n_microbatches,
+                       throughput=s.throughput, p99_tbt=s.tbt.p99)
+            rows.append(row)
+            print(",".join(f"{row[f]:.6g}" if isinstance(row[f], float)
+                           else str(row[f]) for f in ROW_FIELDS))
+    measured = {m: b for (m, _), b in measured.items()}  # last leg per mode
+    if args.sp:
+        # the point of the SP column: sharded norm/residual region means
+        # strictly fewer live activation bytes and less modelled
+        # non-matmul time at tp >= 2 — fail loudly if the claim breaks
+        by_key = {(r["mode"], r["sp"]): r for r in rows}
+        for mode in ("chunked", "unchunked"):
+            off, on = by_key[(mode, 0)], by_key[(mode, 1)]
+            assert on["activation_bytes"] < off["activation_bytes"], \
+                (mode, on["activation_bytes"], off["activation_bytes"])
+            assert on["predicted_others_time"] < \
+                off["predicted_others_time"], mode
+        print("# sp=1 legs: activation bytes and predicted others time "
+              "strictly below sp=0 at this tp", file=sys.stderr)
     if args.pp == 1:
         print(f"# pp=1 no-pipeline baseline: chunked bubble "
               f"{measured['chunked']:.1%}, unchunked "

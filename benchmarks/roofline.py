@@ -201,12 +201,151 @@ def kernel_variant_rows() -> List[Dict]:
     return rows
 
 
+# --------------------------------------------------------------------------
+# Parametric tile-time model (autotuner backend, tools/autotune_tiles.py)
+# --------------------------------------------------------------------------
+# Per-grid-step fixed cost of the pallas kernel (grid bookkeeping, scalar
+# prefetch reads, loop-carried flash state handling), expressed in HBM
+# bytes like DMA_OVERHEAD_BYTES.  REPRO_PAGED_KV_PAGES pages fetched per
+# grid step amortise this over kv_pages; the per-page DMA descriptor
+# overhead does NOT amortise (pool blocks are non-contiguous, every page
+# needs its own copy descriptor).
+GRID_STEP_OVERHEAD_BYTES = 512
+# VMEM working-set budget per core (pallas guide: ~16 MB/core); the
+# autotuner rejects tile choices whose double-buffered KV pages + q/o
+# tiles exceed this.
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def tile_variant_time(kernel: str, *, kv_pages: int, q_block: int,
+                      n_buffers: int) -> Optional[Dict]:
+    """Modelled execution time of the FUSED-pool paged attention kernel at
+    one (``kv_pages``, ``q_block``, ``n_buffers``) tile point — the three
+    ``REPRO_PAGED_*`` env knobs of ``repro.kernels.ops``.
+
+    Extends :func:`_kernel_variant_row`'s bandwidth math (same payload,
+    same per-page descriptor overhead) with the knob effects:
+
+    * ``kv_pages`` — pages fetched per grid step: amortises the
+      per-grid-step fixed cost (``GRID_STEP_OVERHEAD_BYTES``) but NOT the
+      per-page DMA descriptors (pool blocks are non-contiguous), and
+      multiplies the VMEM KV working set;
+    * ``q_block`` — prefill q-tile rows: the KV stream is re-read once
+      per q tile (``ceil(chunk / q_block)`` times), so bigger tiles cut
+      KV traffic at the price of a bigger VMEM q/o tile (decode has one
+      q row per sequence; the knob is clamped to no effect there);
+    * ``n_buffers`` — DMA buffers: 1 serialises fetch and compute,
+      >= 2 overlaps them behind an ``(n_buffers - 1)``-page pipeline
+      fill; every extra buffer adds a KV page to the VMEM working set.
+
+    Returns ``None`` when the point exceeds the ``VMEM_BYTES`` budget
+    (an invalid configuration, not a slow one)."""
+    if kernel not in ("decode", "prefill"):
+        raise ValueError(kernel)
+    if kv_pages < 1 or q_block < 1 or n_buffers < 1:
+        raise ValueError("tile knobs must be >= 1")
+    g = KERNEL_GEOM
+    hw = TPU_V5E
+    page_rows = g["block_size"] * 2 * g["head_dim"] * g["dtype_bytes"]
+    n_rows = g["batch"] * g["n_kv_heads"] * g["pages_per_seq"]
+    q_tokens = g["batch"] if kernel == "decode" else g["chunk"]
+    qb = q_tokens if kernel == "decode" else min(q_block, g["chunk"])
+    n_q_tiles = -(-q_tokens // qb)
+    # VMEM working set: buffered KV pages + one q tile + one o tile (+ the
+    # flash running state, negligible next to the tiles)
+    q_tile_bytes = qb * g["n_q_heads"] * g["head_dim"] * g["dtype_bytes"]
+    vmem = n_buffers * kv_pages * page_rows + 2 * q_tile_bytes
+    if vmem > VMEM_BYTES:
+        return None
+    # traffic: each q tile re-streams the full KV (+ per-page descriptor),
+    # and each grid step (kv_pages pages) pays the fixed step cost once
+    kv_payload = n_rows * page_rows
+    qo_payload = 2 * q_tokens * g["n_q_heads"] * g["head_dim"] \
+        * g["dtype_bytes"]
+    n_steps = -(-n_rows // kv_pages)
+    modeled_bytes = (n_q_tiles * (kv_payload + n_rows * DMA_OVERHEAD_BYTES
+                                  + n_steps * GRID_STEP_OVERHEAD_BYTES)
+                     + qo_payload)
+    flops = 4.0 * q_tokens * g["n_q_heads"] * g["pages_per_seq"] \
+        * g["block_size"] * g["head_dim"]
+    if kernel == "prefill":
+        flops *= 0.5                          # causal: ~half the scores
+    t_dma = modeled_bytes / hw.hbm_bw
+    t_compute = flops / hw.peak_flops
+    if n_buffers >= 2:
+        fill_bytes = (n_buffers - 1) * kv_pages \
+            * (page_rows + DMA_OVERHEAD_BYTES)
+        t_total = max(t_dma, t_compute) + fill_bytes / hw.hbm_bw
+    else:
+        t_total = t_dma + t_compute
+    return {
+        "kernel": kernel, "kv_pages": kv_pages, "q_block": qb,
+        "n_buffers": n_buffers, "modeled_bytes": modeled_bytes,
+        "vmem_bytes": vmem, "time_s": t_total,
+    }
+
+
+# --------------------------------------------------------------------------
+# Sequence-parallel cost table: tp x sp from the analytical model
+# --------------------------------------------------------------------------
+# Fixed serving point for the SP table (one decode-maximal hybrid
+# iteration of the paper's GPT-3 config).  Constants, not knobs: the
+# artifact must be byte-stable so check_regression can gate it.
+SP_GEOM = dict(arch="paper-gpt3-175b", chunk=256, n_decodes=8, ctx=1024)
+
+
+def sp_variant_rows() -> List[Dict]:
+    """The ``tp x sp`` cost table behind README §Tensor parallelism's SP
+    claim, from :func:`repro.sim.cost_model.iteration_time`: sequence
+    parallelism shards the non-matmul "others" term (norms, residual
+    adds) and the inter-block activation bytes by ``tp`` while moving the
+    same collective payload as the all-reduce it replaces.  Asserted here
+    because the artifact gates on it: at ``tp >= 2`` the SP rows must
+    show strictly lower ``others_s`` and ``activation_bytes``; at
+    ``tp = 1`` SP must be an exact no-op."""
+    from repro.sim.cost_model import (BatchSpec, DecodeSeg, PrefillSeg,
+                                      iteration_time, sp_activation_bytes)
+    g = SP_GEOM
+    cfg = get_config(g["arch"])
+    hw = TPU_V5E
+    spec = BatchSpec(prefills=(PrefillSeg(g["chunk"], g["ctx"]),),
+                     decodes=(DecodeSeg(g["n_decodes"], g["ctx"]),),
+                     fused=True)
+    n_tokens = g["chunk"] + g["n_decodes"]
+    rows = []
+    for tp in (1, 2, 4):
+        for sp in (0, 1):
+            bd = iteration_time(cfg, hw, spec, n_chips=tp, sp=bool(sp))
+            rows.append({
+                "tp": tp, "sp": sp,
+                "others_s": bd.others, "collective_s": bd.collective,
+                "activation_bytes": sp_activation_bytes(
+                    cfg, n_tokens, n_chips=tp, sp=bool(sp)),
+                "total_s": bd.total,
+                "throughput": n_tokens / bd.total,    # tokens/s (gated)
+            })
+    by = {(r["tp"], r["sp"]): r for r in rows}
+    for tp in (2, 4):
+        assert by[(tp, 1)]["others_s"] < by[(tp, 0)]["others_s"], \
+            f"SP must shard the others term (tp={tp})"
+        assert (by[(tp, 1)]["activation_bytes"]
+                < by[(tp, 0)]["activation_bytes"]), \
+            f"SP must shrink activation bytes (tp={tp})"
+    assert by[(1, 1)] == {**by[(1, 0)], "sp": 1}, \
+        "SP at tp=1 must be an exact no-op"
+    return rows
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser(
         description="emit the paged-kernel bandwidth table "
-                    "(BENCH_roofline_kernels.json)")
-    ap.add_argument("--out", default="BENCH_roofline_kernels.json")
+                    "(BENCH_roofline_kernels.json) and the tp x sp "
+                    "sequence-parallel cost table (BENCH_roofline_sp.json)")
+    ap.add_argument("--out", default="BENCH_roofline_kernels.json",
+                    help="kernel table path ('' disables)")
+    ap.add_argument("--sp-out", default="BENCH_roofline_sp.json",
+                    help="sequence-parallel table path ('' disables)")
     args = ap.parse_args(argv)
     rows = kernel_variant_rows()
     for r in rows:
@@ -214,9 +353,22 @@ def main(argv=None) -> int:
               f"bytes={r['modeled_bytes']:>9d} dma={r['n_dma']:>5d} "
               f"achieved={r['throughput']:7.1f} GB/s "
               f"({r['bw_fraction']:.0%} of model bw)")
-    pathlib.Path(args.out).write_text(
-        json.dumps({"bench": "roofline_kernels", "rows": rows}, indent=1))
-    print(f"wrote {args.out} ({len(rows)} rows)")
+    if args.out:
+        pathlib.Path(args.out).write_text(
+            json.dumps({"bench": "roofline_kernels", "rows": rows},
+                       indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+    if args.sp_out:
+        sp_rows = sp_variant_rows()
+        for r in sp_rows:
+            print(f"tp={r['tp']} sp={r['sp']} "
+                  f"others={r['others_s'] * 1e3:8.3f}ms "
+                  f"coll={r['collective_s'] * 1e3:8.3f}ms "
+                  f"act={r['activation_bytes'] / 1e6:8.1f}MB "
+                  f"tput={r['throughput']:9.1f} tok/s")
+        pathlib.Path(args.sp_out).write_text(
+            json.dumps({"bench": "roofline_sp", "rows": sp_rows}, indent=1))
+        print(f"wrote {args.sp_out} ({len(sp_rows)} rows)")
     return 0
 
 

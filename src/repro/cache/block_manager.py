@@ -94,6 +94,13 @@ class BlockManager:
         self._host_free: List[int] = list(range(self.n_host_slots - 1,
                                                 -1, -1))
         self._swapped: Dict[int, List[int]] = {}
+        # admission reservations: req_id -> blocks earmarked but not yet
+        # allocated.  Reservations never touch the free list — they are a
+        # promise consumed as the owner's chunks actually allocate
+        # (``ensure`` / copy-on-write forks), and capacity queries charge
+        # OTHER requests for them so two admissions can never double-book
+        # the same free blocks (see :meth:`reserve`).
+        self._reserved: Dict[int, int] = {}
 
     # ------------------------------------------------------------- queries
     @property
@@ -133,6 +140,20 @@ class BlockManager:
         ``n_host_free + n_swapped == n_host_slots``."""
         return sum(len(s) for s in self._swapped.values())
 
+    @property
+    def n_reserved(self) -> int:
+        """Free blocks earmarked by admission reservations (not yet
+        allocated; the free list still contains them)."""
+        return sum(self._reserved.values())
+
+    def reserved_for(self, req_id: int) -> int:
+        return self._reserved.get(req_id, 0)
+
+    def _reserved_other(self, req_id: int) -> int:
+        """Blocks reserved by every request EXCEPT ``req_id`` — the part
+        of the free list this request may not touch."""
+        return sum(n for r, n in self._reserved.items() if r != req_id)
+
     def refcount(self, block: int) -> int:
         return self._refs.get(block, 0)
 
@@ -166,23 +187,63 @@ class BlockManager:
 
     def can_allocate_blocks(self, n: int, *, watermark: bool = True) -> bool:
         """Block-granular :meth:`can_allocate` — what a prefix-aware
-        admission gate charges after subtracting its hit blocks."""
+        admission gate charges after subtracting its hit blocks.  Blocks
+        already promised to admitted-but-still-prefilling requests
+        (:meth:`reserve`) are NOT available: without this, two oversized
+        admissions passing the same instantaneous free-list check can
+        wedge a small pool once their lazy chunk allocations collide."""
         floor = self.watermark_blocks if watermark else 0
-        return self.n_free + self.n_reclaimable - int(n) >= floor
+        return self.n_free + self.n_reclaimable - self.n_reserved \
+            - int(n) >= floor
 
     def can_append(self, req_id: int, n_tokens: int) -> bool:
         """Can ``req_id``'s table grow to cover ``n_tokens`` positions?
-        Appends for already-running requests ignore the watermark."""
+        Appends for already-running requests ignore the watermark but must
+        not eat into blocks reserved for OTHER admitted requests."""
         need = self.blocks_for_tokens(n_tokens) \
             - len(self._tables.get(req_id, ()))
-        return need <= self.n_free + self.n_reclaimable
+        return need <= self.n_free + self.n_reclaimable \
+            - self._reserved_other(req_id)
 
     def appendable_tokens(self, req_id: int) -> int:
         """Positions ``req_id`` could cover right now: already-allocated
         capacity plus everything left in the free list (no watermark),
-        counting evictable prefix-cache blocks as free."""
+        counting evictable prefix-cache blocks as free and excluding
+        blocks reserved for other requests (the request's OWN reservation
+        is part of the free count and stays claimable)."""
         return self.allocated_tokens(req_id) \
-            + (self.n_free + self.n_reclaimable) * self.block_size
+            + max(self.n_free + self.n_reclaimable
+                  - self._reserved_other(req_id), 0) * self.block_size
+
+    # ------------------------------------------------------- reservations
+    def reserve(self, req_id: int, n: int):
+        """Earmark ``n`` future blocks for ``req_id`` (taken by the
+        scheduler at ADMISSION, after :meth:`can_allocate_blocks` said the
+        whole prompt fits).  The free list is untouched; the promise is
+        consumed block-by-block as the owner's chunks actually allocate
+        (:meth:`ensure`, copy-on-write forks) and any remainder dies with
+        the request (:meth:`free` / :meth:`swap_out`).  Capacity queries
+        charge everyone ELSE for outstanding reservations, closing the
+        admit-then-starve race where a second prompt is admitted against
+        free blocks the first admission already needs."""
+        if int(n) > 0:
+            self._reserved[req_id] = self._reserved.get(req_id, 0) + int(n)
+
+    def _consume_reservation(self, req_id: int, n: int):
+        """An allocation for ``req_id`` just landed: retire up to ``n``
+        blocks of its outstanding promise."""
+        held = self._reserved.get(req_id, 0)
+        if not held or n <= 0:
+            return
+        if held > n:
+            self._reserved[req_id] = held - n
+        else:
+            del self._reserved[req_id]
+
+    def release_reservation(self, req_id: int) -> int:
+        """Drop ``req_id``'s remaining promise (idempotent); returns the
+        number of blocks un-earmarked."""
+        return self._reserved.pop(req_id, 0)
 
     # --------------------------------------------------------- allocation
     def _alloc_one(self) -> int:
@@ -232,6 +293,7 @@ class BlockManager:
         table = self._tables.setdefault(req_id, [])
         for _ in range(max(need, 0)):
             table.append(self._alloc_one())
+        self._consume_reservation(req_id, need)
         return table
 
     def share(self, req_id: int, blocks: Sequence[int]) -> List[int]:
@@ -277,6 +339,9 @@ class BlockManager:
             self._decref(b)           # shared: never returns to free list
             table[i] = nb
             pairs.append((b, nb))
+            # admission charged one block for the fork of a trimmed
+            # full-prompt prefix hit — retire that promise here
+            self._consume_reservation(req_id, 1)
         return pairs
 
     def free(self, req_id: int) -> int:
@@ -288,6 +353,7 @@ class BlockManager:
         slot release still calls :meth:`free` (the table is already gone,
         so it is a no-op) and the swapped bytes must survive until
         :meth:`swap_in` or :meth:`drop_swap`."""
+        self._reserved.pop(req_id, None)
         table = self._tables.pop(req_id, None)
         if not table:
             return 0
@@ -327,6 +393,8 @@ class BlockManager:
                 f"table, already swapped, or {self.n_host_free} host "
                 f"slots free for {len(self._tables.get(req_id, ()))} "
                 f"blocks)")
+        self._reserved.pop(req_id, None)   # a mid-prefill victim's resume
+        # re-allocates with append semantics; the promise does not persist
         table = self._tables.pop(req_id)
         slots: List[int] = []
         pairs: List[Tuple[int, int]] = []
@@ -351,7 +419,8 @@ class BlockManager:
         if slots is None:
             return False
         floor = self.watermark_blocks if watermark else 0
-        return len(slots) + floor <= self.n_free + self.n_reclaimable
+        return len(slots) + floor <= self.n_free + self.n_reclaimable \
+            - self._reserved_other(req_id)
 
     def swap_in(self, req_id: int) -> List[Tuple[int, int]]:
         """Rebuild ``req_id``'s table from fresh device blocks (reclaiming

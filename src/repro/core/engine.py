@@ -273,10 +273,12 @@ class Engine:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0, host_blocks: int = 0,
                  block_manager: Optional[BlockManager] = None,
-                 tp: int = 1, devices: Optional[Sequence] = None):
+                 tp: int = 1, devices: Optional[Sequence] = None,
+                 sp: bool = False):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
+        self.dtype = dtype
         self.C = int(chunk_size)
         self.D = int(decode_slots)
         self.n_slots = int(n_slots)
@@ -320,6 +322,7 @@ class Engine:
                 # an explicit device request instead of dropping it
                 self.params = jax.device_put(self.params, devices[0])
                 self.cache = jax.device_put(self.cache, devices[0])
+        self._init_sp(sp, self.tp_mesh)
         self.sampling = sampling
         self._key = jax.random.PRNGKey(seed)
         self._free: List[int] = list(range(n_slots))
@@ -337,6 +340,43 @@ class Engine:
         self._gather_pool = jax.jit(_gather_pool)
         self._scatter_pool = jax.jit(_scatter_pool, donate_argnums=(0,))
         self.iterations = 0
+
+    def _init_sp(self, sp: bool, mesh):
+        """Resolve the sequence-parallel configuration: the activation
+        sharding hint for the packed steps and the padded lane widths.
+
+        SP pads the packed lane widths up to multiples of ``tp`` so the
+        token axis splits evenly (``shd.pad_tokens_to_tp``): extra chunk
+        rows sit past ``chunk_len`` (masked like any partial chunk) and
+        extra decode lanes target the scratch slot (masked like any unused
+        lane), so ragged batches stay correct.  ``self.C``/``self.D``
+        remain the scheduler-visible budgets; only the compiled shapes
+        grow.  With ``sp`` off or ``tp == 1`` the lanes equal the budgets
+        and the hint is ``None`` — the trace is byte-for-byte the
+        unsharded one.  The pipeline engine re-invokes this after it
+        learns its per-stage tp (its base-class init runs at ``tp=1``)."""
+        from repro import sharding as shd
+        self.sp = bool(sp) and self.tp > 1
+        self._sp_sharding = (shd.sp_activation_sharding(mesh)
+                             if self.sp else None)
+        if self._sp_sharding is None:
+            self.sp = False
+        pad = self.tp if self.sp else 1
+        self._lane_C = shd.pad_tokens_to_tp(self.C, pad)
+        self._lane_D = shd.pad_tokens_to_tp(self.D, pad)
+
+    def activation_bytes_per_iteration(self) -> int:
+        """Per-chip residual-stream footprint of one packed hybrid step:
+        the two ``[T, d_model]`` norm+residual boundary activations per
+        layer that sequence parallelism shards.  ``T`` is the compiled
+        lane width ``C + D`` (padded to ``tp`` under SP) divided by ``tp``
+        when SP is on — the measured counterpart of
+        :func:`repro.sim.cost_model.sp_activation_bytes`."""
+        t = self._lane_C + self._lane_D
+        if self.sp:
+            t //= self.tp
+        itemsize = np.dtype(self.dtype).itemsize
+        return 2 * self.cfg.n_layers * t * self.cfg.d_model * itemsize
 
     @property
     def paged(self) -> bool:
@@ -534,7 +574,12 @@ class Engine:
         kc, kd = jax.random.split(key)
         chunk_tok = (sample(chunk_logits[0], kc, self.sampling)
                      if chunk_logits is not None else None)
-        dec_tok = (sample(decode_logits, kd, self.sampling)
+        # sample only the REAL decode rows: SP pads the lanes to a
+        # multiple of tp, and the PRNG's noise depends on the array
+        # shape, so sampling the padded [lane_D, V] block would change
+        # every stochastic decode stream vs the unpadded engine (a
+        # static slice; no-op when the lanes are unpadded)
+        dec_tok = (sample(decode_logits[:self.D], kd, self.sampling)
                    if decode_logits is not None else None)
         return chunk_tok, dec_tok, cache
 
@@ -581,8 +626,10 @@ class Engine:
 
         A chunk-less iteration packs a ZERO-width chunk lane (the
         decode-only shape) unless ``pad_chunk`` forces the C-wide scratch
-        lane (warmup's hybrid-shape compile)."""
-        C_w = self.C if (chunk is not None or pad_chunk) else 0
+        lane (warmup's hybrid-shape compile).  Lane widths are the
+        SP-padded ``_lane_C``/``_lane_D`` (equal to ``C``/``D`` when SP is
+        off) so the packed token axis always splits evenly over ``tp``."""
+        C_w = self._lane_C if (chunk is not None or pad_chunk) else 0
         ct = np.zeros((C_w,), np.int32)
         if chunk:
             ct[:len(chunk.tokens)] = chunk.tokens
@@ -592,9 +639,9 @@ class Engine:
         else:
             c_slot, c_start, c_len = self.scratch, 0, 0
 
-        dt = np.zeros((self.D,), np.int32)
-        ds = np.full((self.D,), self.scratch, np.int32)
-        dc = np.zeros((self.D,), np.int32)
+        dt = np.zeros((self._lane_D,), np.int32)
+        ds = np.full((self._lane_D,), self.scratch, np.int32)
+        dc = np.zeros((self._lane_D,), np.int32)
         for i, w in enumerate(decodes):
             dt[i] = w.token
             ds[i] = self._slot_of[w.req_id]
@@ -607,7 +654,7 @@ class Engine:
         # a whole max_len scratch row
         M = self.blocks_per_seq
         cb = np.zeros((M,), np.int32)
-        db = np.zeros((self.D, M), np.int32)
+        db = np.zeros((self._lane_D, M), np.int32)
         if self.paged:
             bm = self.block_manager
             # copy-on-write: any write landing in a block this request
@@ -663,6 +710,10 @@ class Engine:
             # per call so engines never see another engine's stale mesh)
             from repro.models import blocks as bk
             bk.set_paged_attn_mesh(self.tp_mesh)
+        # trace-time SP hint (None when SP is off — always reset so one
+        # engine never traces under another engine's stale sharding)
+        from repro.models import stack as _stack
+        _stack.set_packed_sp_sharding(self._sp_sharding)
         chunk_tok, dec_tok, self.cache = self._step(
             self.params, pk, self.cache, sub)
         self.iterations += 1

@@ -65,7 +65,8 @@ class PipelineEngine(Engine):
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0, host_blocks: int = 0,
                  block_manager: Optional[BlockManager] = None,
-                 tp: int = 1, devices: Optional[Sequence] = None):
+                 tp: int = 1, devices: Optional[Sequence] = None,
+                 sp: bool = False):
         from repro.launch import pipeline as pl
         # tp is NOT forwarded: the monolithic cache built by Engine.__init__
         # is only the host-side source of the per-stage slices, which are
@@ -105,6 +106,17 @@ class PipelineEngine(Engine):
             self._stage_put = list(self.devices)
             self.stage_params = pl.place_stages(stage_params, self.devices)
             self.stage_caches = pl.place_stages(stage_caches, self.devices)
+        # SP re-resolves against the real per-stage tp (super().__init__
+        # ran at tp=1 so its lane widths were the unpadded budgets); every
+        # stage row has the same model-axis size, so one lane geometry and
+        # one per-stage sharding list serve all stages
+        self._init_sp(sp, self.stage_meshes[0] if self.stage_meshes else None)
+        if self.sp:
+            from repro import sharding as shd
+            self._sp_shardings = [shd.sp_activation_sharding(m)
+                                  for m in self.stage_meshes]
+        else:
+            self._sp_shardings = [None] * self.pp
         # the monolithic cache from Engine.__init__ was the source of the
         # per-stage slices (bit-identical initial state), now dropped
         self.cache = None
@@ -142,7 +154,9 @@ class PipelineEngine(Engine):
         kc, kd = jax.random.split(key)
         chunk_tok = (sample(chunk_logits[0], kc, self.sampling)
                      if chunk_logits is not None else None)
-        dec_tok = (sample(decode_logits, kd, self.sampling)
+        # real decode rows only — lane padding must not perturb the
+        # sampling noise shape (see Engine._step_impl)
+        dec_tok = (sample(decode_logits[:self.D], kd, self.sampling)
                    if decode_logits is not None else None)
         return chunk_tok, dec_tok, cache
 
@@ -241,6 +255,10 @@ class PipelineEngine(Engine):
                 from repro.models import blocks as bk
                 bk.set_paged_attn_mesh(
                     self.stage_meshes[s] if self.stage_meshes else None)
+            # per-stage SP hint (None when SP is off; each stage's jit
+            # traces against its own mesh row's token sharding)
+            from repro.models import stack as _stack
+            _stack.set_packed_sp_sharding(self._sp_shardings[s])
             t0 = time.perf_counter()
             # the activation hop onto this stage's device(s) is part of the
             # stage's measured time (it IS the P2P transfer); with tp > 1

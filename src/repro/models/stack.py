@@ -233,20 +233,23 @@ def apply_layer_packed(cfg, kind, p, x, cache, pk: PackedBatch):
     elif kind == "ssd":
         mo, new_cache["ssd"] = bk.ssd_packed(cfg, p["mixer"], h,
                                              cache["ssd"], pk)
-        return x + mo, new_cache, 0.0
+        return _sp_scatter(x + mo), new_cache, 0.0
     elif kind == "xdec":
         mo, new_cache["attn"] = bk.attn_packed(cfg, p["mixer"], h,
                                                cache["attn"], pk)
-        x = x + mo
+        x = _sp_scatter(x + mo)
         hc = cm.rms_norm(x, p["lnc"], cfg.norm_eps)
         mo, new_cache["cross"] = bk.cross_packed(cfg, p["cross"], hc,
                                                  cache["cross"], pk)
     else:
         raise ValueError(kind)
-    x = x + mo
+    # SP: each residual add is pinned token-sharded — this is where the
+    # row-parallel matmul's all-reduce splits into reduce-scatter (here) +
+    # all-gather (in front of the next sharded matmul, inserted by GSPMD)
+    x = _sp_scatter(x + mo)
     fo, aux = _apply_ffn(cfg, kind, p, x)
     if fo is not None:
-        x = x + fo
+        x = _sp_scatter(x + fo)
     return x, new_cache, aux
 
 
@@ -358,6 +361,51 @@ def _constrain_cache_act(x):
     if _CACHE_ACT_SPEC is None or len(_CACHE_ACT_SPEC) != x.ndim:
         return x
     return jax.lax.with_sharding_constraint(x, _CACHE_ACT_SPEC)
+
+
+# Sequence parallelism over the packed token axis (Megatron SP on the
+# serving engines' packed path).  When set to a NamedSharding with spec
+# ``P("model", None)``, every residual add in ``apply_layer_packed`` pins
+# the ``[T, d]`` residual stream token-sharded — GSPMD then lowers each
+# row-parallel matmul's partial-sum combine to a reduce-scatter (instead
+# of an all-reduce) and inserts the matching all-gather just before the
+# next column-parallel matmul, so RMSNorm + residual adds run on T/tp
+# tokens per chip at identical communication volume.  ``None`` (the
+# default, and tp=1) keeps the trace byte-for-byte untouched.  Set by the
+# engines right before each jitted packed step, mirroring
+# ``bk.set_paged_attn_mesh``; it is a NamedSharding because the engine
+# jits do not run inside a ``with mesh:`` context.
+_PACKED_SP_SHARDING = None
+
+
+def set_packed_sp_sharding(sharding):
+    """sharding: ``jax.sharding.NamedSharding`` over the packed token axis
+    (see :func:`repro.sharding.placement.sp_activation_sharding`), or
+    ``None`` to disable.  The packed token count must already be a
+    multiple of the mesh's model-axis size
+    (:func:`repro.sharding.placement.pad_tokens_to_tp`)."""
+    global _PACKED_SP_SHARDING
+    _PACKED_SP_SHARDING = sharding
+
+
+def _sp_scatter(x):
+    """Pin a packed ``[T, d]`` residual to the SP token-sharded layout
+    (the reduce-scatter side of the RS/AG pair); identity when SP is off
+    or ``x`` is not the rank-2 packed residual."""
+    if _PACKED_SP_SHARDING is None or x.ndim != 2:
+        return x
+    return jax.lax.with_sharding_constraint(x, _PACKED_SP_SHARDING)
+
+
+def _sp_gather(x):
+    """Pin a packed ``[T, d]`` residual back to fully-replicated (the
+    all-gather side) — used once on the last stage before the final norm /
+    logits glue, whose dynamic chunk-row slice must see every token."""
+    if _PACKED_SP_SHARDING is None or x.ndim != 2:
+        return x
+    import jax.sharding as _shd
+    rep = _shd.NamedSharding(_PACKED_SP_SHARDING.mesh, _shd.PartitionSpec())
+    return jax.lax.with_sharding_constraint(x, rep)
 
 
 def _scan_unroll() -> int | bool:
@@ -478,6 +526,7 @@ def forward_packed_stage(cfg: ModelConfig, params, pk: PackedBatch, cache,
     group_kinds, _, tail_kinds = group_split(cfg)
     if first:
         x = jnp.take(params["embed"], pk.token_ids(), axis=0)
+    x = _sp_scatter(x)      # SP entry: shard the residual carry up front
 
     def apply_fn(kind, p, c, x):
         return apply_layer_packed(cfg, kind, p, x, c, pk)
@@ -510,6 +559,9 @@ def forward_packed_stage(cfg: ModelConfig, params, pk: PackedBatch, cache,
     if not last:
         return x, new_cache, aux
 
+    # SP exit: the final all-gather — the dynamic chunk-row slice and the
+    # decode-lane split below index arbitrary token rows
+    x = _sp_gather(x)
     x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
     C, D = pk.num_chunk, pk.num_decode
     if C:

@@ -27,7 +27,11 @@ With a shared :class:`repro.cache.BlockManager` the policy is additionally
 **block-aware** (the vLLM/Sarathi-Serve memory discipline):
 
 * admission is gated on ``can_allocate`` — the whole prompt must fit in
-  the pool with the watermark to spare;
+  the pool with the watermark to spare — and the admitted prompt's novel
+  blocks are **reserved** (:meth:`BlockManager.reserve`) so a later
+  admission cannot double-book the same free blocks while this prompt's
+  chunks are still allocating lazily (the reservation drains as
+  ``ensure`` lands blocks and dies with the request);
 * every scheduled decode *reserves* its next block before the plan is
   emitted, so the engine's KV append can never fail mid-iteration;
 * when the pool runs dry, the lowest-priority (latest-admitted) running
@@ -229,6 +233,14 @@ class SarathiServeScheduler(Scheduler):
             del self.waiting[i]
             req.state = State.PREFILLING
             self.running.append(req)
+            if bm is not None:
+                # earmark the admitted prompt's novel blocks NOW: the
+                # chunks allocate lazily over many iterations, and without
+                # the reservation a later admission passes the same
+                # instantaneous free-list check and the two prefills
+                # starve each other mid-prompt (prefills never preempt,
+                # so the pool wedges).  Consumed as ensure() allocates.
+                bm.reserve(req.req_id, need)
             if bm is not None and hit_blocks:
                 bm.share(req.req_id, hit_blocks)
                 req.prefilled = hit_tokens

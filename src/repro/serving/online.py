@@ -508,7 +508,7 @@ class OnlineServer:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.0, host_blocks: int = 0,
                  preempt_mode: str = "recompute", swap_hw=None,
-                 pp: int = 1, tp: int = 1,
+                 pp: int = 1, tp: int = 1, sp: bool = False,
                  devices=None, max_decodes: Optional[int] = None,
                  force_pipeline: bool = False, prefix_cache: bool = False):
         from repro.serving.server import build_engine_and_scheduler
@@ -521,7 +521,7 @@ class OnlineServer:
             seed=seed, policy_kwargs=policy_kwargs, paged=paged,
             block_size=block_size, n_blocks=n_blocks, watermark=watermark,
             host_blocks=host_blocks, preempt_mode=preempt_mode,
-            swap_hw=swap_hw, pp=pp, tp=tp, devices=devices,
+            swap_hw=swap_hw, pp=pp, tp=tp, sp=sp, devices=devices,
             max_decodes=max_decodes, force_pipeline=force_pipeline,
             prefix_cache=prefix_cache)
         self.executor = EngineExecutor(self.engine)

@@ -32,7 +32,7 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                                paged: bool = False, block_size: int = 16,
                                n_blocks: Optional[int] = None,
                                watermark: float = 0.0, pp: int = 1,
-                               tp: int = 1, devices=None,
+                               tp: int = 1, sp: bool = False, devices=None,
                                max_decodes: Optional[int] = None,
                                force_pipeline: bool = False,
                                prefix_cache: bool = False,
@@ -62,6 +62,12 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
     :mod:`repro.sharding` policy.  Scheduling is untouched — slot budgets,
     token budgets and block accounting are per-replica quantities that do
     not change with intra-replica parallelism.
+
+    ``sp=True`` (with ``tp > 1``) additionally runs the packed steps
+    sequence-parallel: the residual stream stays token-sharded through the
+    norm + residual regions between the TP matmul blocks, trading each
+    per-layer all-reduce for a reduce-scatter/all-gather pair (README
+    §Tensor parallelism).  At ``tp=1`` it is a documented no-op.
 
     ``force_pipeline`` builds a :class:`PipelineEngine` even at ``pp=1``
     (the degenerate one-stage pipeline, bit-identical to ``Engine``): the
@@ -109,7 +115,7 @@ def build_engine_and_scheduler(cfg: ModelConfig, params, *, policy: str,
                decode_slots=max(n_slots - 1, 1), dtype=dtype,
                sampling=sampling, seed=seed, paged=paged,
                block_size=block_size, n_blocks=n_blocks,
-               watermark=watermark, host_blocks=host_blocks)
+               watermark=watermark, host_blocks=host_blocks, sp=sp)
     if pp > 1 or force_pipeline:
         engine = PipelineEngine(cfg, params, pp=pp, tp=tp, devices=devices,
                                 **ekw)
@@ -210,7 +216,7 @@ class Server:
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None, watermark: float = 0.0,
-                 pp: int = 1, tp: int = 1, devices=None,
+                 pp: int = 1, tp: int = 1, sp: bool = False, devices=None,
                  prefix_cache: bool = False, host_blocks: int = 0,
                  preempt_mode: str = "recompute", swap_hw=None):
         self.cfg = cfg
@@ -220,7 +226,7 @@ class Server:
             n_slots=n_slots, max_len=max_len, max_prompt_len=max_prompt_len,
             token_budget=token_budget, dtype=dtype, sampling=sampling,
             seed=seed, paged=paged, block_size=block_size,
-            n_blocks=n_blocks, watermark=watermark, pp=pp, tp=tp,
+            n_blocks=n_blocks, watermark=watermark, pp=pp, tp=tp, sp=sp,
             devices=devices, prefix_cache=prefix_cache,
             host_blocks=host_blocks, preempt_mode=preempt_mode,
             swap_hw=swap_hw)

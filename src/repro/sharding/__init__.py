@@ -6,15 +6,19 @@ Megatron-style sharding rules (previously private to ``repro.launch``);
 params and caches.  ``repro.launch.shardings`` re-exports the policy for
 the dry-run/train/serve launchers, so launch and serving cannot drift."""
 from repro.sharding.placement import (check_tp_supported, make_tp_mesh,
-                                      replicated, shard_cache, shard_params,
+                                      pad_tokens_to_tp, replicated,
+                                      shard_cache, shard_params,
+                                      sp_activation_sharding,
                                       stage_tp_meshes)
 from repro.sharding.policy import (DATA, MDL, batch_axis_size, cache_pspecs,
                                    kv_shard_mode, mesh_axis, param_pspecs,
-                                   use_fsdp, with_sharding)
+                                   sp_activation_pspec, use_fsdp,
+                                   with_sharding)
 
 __all__ = [
     "DATA", "MDL", "param_pspecs", "cache_pspecs", "use_fsdp",
     "kv_shard_mode", "with_sharding", "mesh_axis", "batch_axis_size",
     "make_tp_mesh", "stage_tp_meshes", "shard_params", "shard_cache",
-    "replicated", "check_tp_supported",
+    "replicated", "check_tp_supported", "sp_activation_pspec",
+    "sp_activation_sharding", "pad_tokens_to_tp",
 ]

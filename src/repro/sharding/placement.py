@@ -72,6 +72,32 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def sp_activation_sharding(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    """NamedSharding for the sequence-parallel packed residual stream, or
+    ``None`` when the mesh is absent / has no real model axis (tp=1) — the
+    engines then skip the constraint entirely, keeping the unsharded trace
+    byte-for-byte untouched.  Built as a NamedSharding (not a bare
+    PartitionSpec) because the jitted packed steps do not run inside a
+    ``with mesh:`` context."""
+    if mesh is None:
+        return None
+    spec = policy.sp_activation_pspec(mesh=mesh)
+    if spec is None:
+        return None
+    return NamedSharding(mesh, spec)
+
+
+def pad_tokens_to_tp(n: int, tp: int) -> int:
+    """Packed token count padded up to a multiple of ``tp`` so the SP
+    token axis splits evenly.  Pad rows are masked downstream: chunk lanes
+    beyond ``chunk_len`` already contribute nothing (attention/sampling
+    mask on the packed chunk), and pad decode lanes target the scratch
+    slot exactly like unused decode lanes do."""
+    if tp <= 1:
+        return int(n)
+    return -(-int(n) // tp) * tp
+
+
 def check_tp_supported(tp: int, paged: bool,
                        cfg: Optional[ModelConfig] = None) -> None:
     """TP support check for the paged attention backends.  GSPMD cannot

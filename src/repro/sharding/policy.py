@@ -186,6 +186,29 @@ def param_pspecs(cfg: ModelConfig, shapes, *, mesh=None,
     return jax.tree_util.tree_map_with_path(leaf_rule, shapes)
 
 
+def sp_activation_pspec(mesh=None, *,
+                        model_axis: Optional[int] = None) -> Optional[P]:
+    """PartitionSpec for a sequence-parallel packed activation: the rank-2
+    ``[tokens, d_model]`` residual stream token-shards over the ``model``
+    axis through the norm + residual region between the TP matmul blocks
+    (Megatron sequence parallelism on the serving engines' packed path).
+
+    Returns ``None`` when the mesh has no real model axis — SP on a
+    ``tp=1`` mesh must leave the trace byte-for-byte untouched, so the
+    caller simply skips the constraint.  The token count must be padded
+    to a multiple of the axis size first (see
+    :func:`repro.sharding.placement.pad_tokens_to_tp`)."""
+    if mesh is not None:
+        if model_axis is not None:
+            raise ValueError("pass either mesh= or model_axis=, not both")
+        model_axis = mesh_axis(mesh, MDL)
+    elif model_axis is None:
+        model_axis = DEFAULT_AXIS
+    if model_axis <= 1:
+        return None
+    return P(MDL, None)
+
+
 def kv_shard_mode() -> str:
     """§Perf knob for GQA caches whose n_kv_heads doesn't divide the model
     axis (would otherwise REPLICATE the cache, 16x memory):

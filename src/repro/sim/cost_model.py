@@ -72,13 +72,44 @@ def _matmul_time(hw: Hardware, m: int, k: int, n: int,
 def tp_allreduce_time(hw: Hardware, n_bytes: float, tp: int) -> float:
     """Ring all-reduce of an ``n_bytes`` activation over ``tp`` chips:
     every chip sends/receives ``2 (tp-1)/tp`` of the buffer over its link
-    (reduce-scatter + all-gather), plus one launch overhead.  This is the
-    per-layer synchronisation Megatron TP pays after each row-parallel
-    matmul — it does NOT shrink with ``tp``, which is exactly why TP x PP
-    composition needs the term to predict bubble interaction."""
+    (reduce-scatter + all-gather fused in ONE kernel), plus one launch
+    overhead.  This is the per-layer synchronisation Megatron TP pays
+    after each row-parallel matmul — it does NOT shrink with ``tp``,
+    which is exactly why TP x PP composition needs the term to predict
+    bubble interaction.
+
+    Sequence parallelism (``iteration_time(..., sp=True)``) decomposes
+    this into its two halves — :func:`tp_reduce_scatter_time` +
+    :func:`tp_all_gather_time` — moving the SAME bytes over the link but
+    leaving the activations token-sharded between the halves, which is
+    what lets the norm/residual "others" term shrink by ``tp``."""
     if tp <= 1 or n_bytes <= 0:
         return 0.0
     return 2.0 * (tp - 1) / tp * n_bytes / hw.link_bw + hw.kernel_overhead
+
+
+def tp_reduce_scatter_time(hw: Hardware, n_bytes: float, tp: int) -> float:
+    """Ring reduce-scatter of an ``n_bytes`` activation over ``tp`` chips
+    — the first half of :func:`tp_allreduce_time`'s ring, emitted as its
+    own kernel under sequence parallelism: each chip sends/receives
+    ``(tp-1)/tp`` of the buffer and is left holding the reduced
+    ``n_bytes / tp`` token shard (norms + residuals then run on the
+    shard, not the full buffer)."""
+    if tp <= 1 or n_bytes <= 0:
+        return 0.0
+    return (tp - 1) / tp * n_bytes / hw.link_bw + hw.kernel_overhead
+
+
+def tp_all_gather_time(hw: Hardware, n_bytes: float, tp: int) -> float:
+    """Ring all-gather restoring a token-sharded ``n_bytes`` activation
+    to replicated — the second half of :func:`tp_allreduce_time`'s ring,
+    emitted immediately before the next column-parallel matmul under
+    sequence parallelism.  Same link traffic as the reduce-scatter half;
+    RS + AG together move exactly the bytes one all-reduce moves, paying
+    one extra kernel launch for the sharded region in between."""
+    if tp <= 1 or n_bytes <= 0:
+        return 0.0
+    return (tp - 1) / tp * n_bytes / hw.link_bw + hw.kernel_overhead
 
 
 def kv_transfer_time(hw: Hardware, n_bytes: float) -> float:
@@ -206,8 +237,8 @@ def _moe_ffn_time(cfg: ModelConfig, hw: Hardware, token_groups:
 
 
 def iteration_time(cfg: ModelConfig, hw: Hardware, spec: BatchSpec,
-                   n_chips: int = 1, others_frac: float = 0.05
-                   ) -> CostBreakdown:
+                   n_chips: int = 1, others_frac: float = 0.05,
+                   sp: bool = False) -> CostBreakdown:
     """Model one engine iteration over the whole model (all layers).
 
     ``n_chips`` divides weights/compute (tensor parallelism over the
@@ -217,7 +248,18 @@ def iteration_time(cfg: ModelConfig, hw: Hardware, spec: BatchSpec,
     attention output projection and the FFN down projection), which do not
     shrink with ``n_chips`` — see :func:`tp_allreduce_time` and the
     ``collective`` field of the returned breakdown.  ``others_frac`` adds
-    the paper's measured <5% for norms/residuals/activations.
+    the paper's measured <5% for norms/residuals/activations — charged at
+    the FULL (single-chip) token count when ``n_chips > 1``, because the
+    inter-block region runs replicated on every TP chip.
+
+    ``sp`` models sequence parallelism over the packed token axis
+    (``repro.models.stack``, Engine ``sp=True``): each per-layer
+    all-reduce splits into :func:`tp_reduce_scatter_time` +
+    :func:`tp_all_gather_time` (same link bytes, one extra launch each),
+    and in exchange the replicated norm/residual ``others`` term shrinks
+    by ``n_chips`` — the activations stay ``[tokens/tp, d_model]`` shards
+    through the inter-block region.  At ``n_chips == 1`` both flags are
+    inert and the breakdown is bit-identical to the unsharded model.
     """
     bd = CostBreakdown()
     if spec.fused:
@@ -247,15 +289,42 @@ def iteration_time(cfg: ModelConfig, hw: Hardware, spec: BatchSpec,
     bd.postproj = post * scale
     bd.ffn = ffn_t * scale
     bd.attn = attn * scale
-    bd.others = (bd.linear + bd.attn) * others_frac
+    # norms / residuals / activation glue: replicated on every TP chip
+    # (full token count) unless sequence parallelism shards the token
+    # axis through the inter-block region — then it splits ideally
+    others_full = (pre + post + ffn_t + attn) * L * others_frac
+    bd.others = others_full / n_chips if (sp and n_chips > 1) \
+        else others_full
     if n_chips > 1:
         coll = 0.0
         for m in groups:
-            # two row-parallel matmul outputs per layer sync [m, d] each
-            coll += 2.0 * tp_allreduce_time(hw, m * cfg.d_model * BYTES,
-                                            n_chips)
+            # two row-parallel matmul outputs per layer sync [m, d] each;
+            # under SP the all-reduce splits into its RS + AG halves
+            # (same bytes, one extra launch) bracketing the sharded region
+            n_bytes = m * cfg.d_model * BYTES
+            if sp:
+                coll += 2.0 * (tp_reduce_scatter_time(hw, n_bytes, n_chips)
+                               + tp_all_gather_time(hw, n_bytes, n_chips))
+            else:
+                coll += 2.0 * tp_allreduce_time(hw, n_bytes, n_chips)
         bd.collective = coll * L
     return bd
+
+
+def sp_activation_bytes(cfg: ModelConfig, n_tokens: int, n_chips: int = 1,
+                        sp: bool = False,
+                        dtype_bytes: int = BYTES) -> float:
+    """Per-chip bytes of the ``[tokens, d_model]`` residual stream held
+    through the two inter-block (norm + residual) regions of each layer —
+    the activation footprint sequence parallelism shrinks.  Replicated TP
+    holds the full token count on every chip; with ``sp`` each chip holds
+    a ``ceil(n_tokens / n_chips)`` token shard (the engine pads the packed
+    token count to a multiple of ``tp``, so the ceil matches the padded
+    lanes exactly)."""
+    t = int(n_tokens)
+    if sp and n_chips > 1:
+        t = -(-t // n_chips)
+    return 2.0 * cfg.n_layers * t * cfg.d_model * dtype_bytes
 
 
 # --------------------------------------------------------------------------

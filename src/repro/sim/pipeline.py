@@ -51,14 +51,17 @@ def _plan_specs(plan: IterationPlan, fused: bool):
 
 
 def plan_time(cfg: ModelConfig, hw: Hardware, plan: IterationPlan, *,
-              n_chips: int = 1, fused: bool = True) -> float:
+              n_chips: int = 1, fused: bool = True,
+              sp: bool = False) -> float:
     """Cost a plan as consecutive packed sub-steps (:func:`_plan_specs`).
     Single-chunk plans reduce to ``iteration_time(plan_to_spec(plan))``.
     ``n_chips`` is the TP degree: compute splits, and the per-layer
     all-reduce term of :func:`repro.sim.cost_model.tp_allreduce_time` is
     charged (``simulate_pipeline`` reports that share separately as
-    ``collective_time``)."""
-    return sum(iteration_time(cfg, hw, s, n_chips=n_chips).total
+    ``collective_time``).  ``sp`` switches the collective to the
+    reduce-scatter/all-gather pair and shards the norm/residual "others"
+    term (sequence parallelism — see ``cost_model.iteration_time``)."""
+    return sum(iteration_time(cfg, hw, s, n_chips=n_chips, sp=sp).total
                for s in _plan_specs(plan, fused))
 
 
@@ -92,7 +95,7 @@ class PipelineResult:
 
 def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
                       scheduler: Scheduler, *, pp: int, tp: int = 1,
-                      fused: bool = True,
+                      sp: bool = False, fused: bool = True,
                       p2p_bytes_per_token: Optional[int] = None,
                       max_iters: int = 1_000_000) -> PipelineResult:
     """Run the scheduler's workload through a ``pp``-stage pipeline.
@@ -101,6 +104,10 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
     per-layer ring all-reduce term (``cost_model.tp_allreduce_time``;
     reported as ``collective_time`` / ``collective_fraction`` on the
     result — the measurable coupling between TP degree and bubble size).
+    ``sp`` runs each stage sequence-parallel: the all-reduce splits into
+    its RS/AG halves and the replicated norm/residual term shards by
+    ``tp`` (``cost_model.iteration_time(sp=True)``), so predicted stage
+    times drop at ``tp >= 2`` while collective bytes stay identical.
     Micro-batch stage time = iteration_time over n_layers/pp layers.  A
     simple P2P activation transfer cost is added between stages; the
     degenerate ``pp=1`` case has no inter-stage links, pays no transfer,
@@ -123,7 +130,7 @@ def simulate_pipeline(cfg: ModelConfig, hw: Hardware,
     def plan_cost(plan: IterationPlan) -> Tuple[float, float]:
         """-> (per-stage service time, full-plan collective time); one
         cost-model evaluation per packed sub-step serves both."""
-        bds = [iteration_time(cfg, hw, s, n_chips=tp)
+        bds = [iteration_time(cfg, hw, s, n_chips=tp, sp=sp)
                for s in _plan_specs(plan, fused)]
         return (sum(b.total for b in bds) / pp,
                 sum(b.collective for b in bds))

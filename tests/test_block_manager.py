@@ -144,3 +144,41 @@ def test_constructor_validation():
         BlockManager(8, 0)
     with pytest.raises(ValueError):
         BlockManager(8, 4, watermark=1.0)
+
+
+def test_reservation_blocks_are_charged_to_others_only():
+    """An admission reservation earmarks free blocks for its owner: the
+    owner's capacity queries still see them, everyone else's do not, and
+    the promise drains as the owner's allocations actually land."""
+    bm = BlockManager(9, 4)                     # 8 usable
+    bm.reserve(0, 6)
+    assert bm.n_reserved == 6 and bm.reserved_for(0) == 6
+    assert bm.n_free == 8                       # free list untouched
+    # a second 6-block admission no longer fits ...
+    assert not bm.can_allocate_blocks(6)
+    assert bm.can_allocate_blocks(2)            # ... but 2 blocks do
+    # owner sees the full pool; a stranger sees only the unreserved tail
+    assert bm.appendable_tokens(0) == 8 * 4
+    assert bm.appendable_tokens(1) == 2 * 4
+    assert bm.can_append(0, 24) and not bm.can_append(1, 24)
+    assert bm.can_append(1, 8)
+    # allocations retire the promise block-by-block
+    bm.ensure(0, 8)                             # 2 blocks land
+    assert bm.reserved_for(0) == 4 and bm.n_free == 6
+    bm.ensure(0, 24)                            # the remaining 4
+    assert bm.reserved_for(0) == 0 and bm.n_reserved == 0
+    assert bm.n_free == 2
+
+
+def test_reservation_dies_with_the_request():
+    bm = BlockManager(9, 4)
+    bm.reserve(0, 6)
+    bm.ensure(0, 8)                             # 2 of 6 consumed
+    assert bm.reserved_for(0) == 4
+    bm.free(0)                                  # mid-prefill abort
+    assert bm.n_reserved == 0 and bm.n_free == 8
+    # release_reservation is the explicit (idempotent) variant
+    bm.reserve(1, 3)
+    assert bm.release_reservation(1) == 3
+    assert bm.release_reservation(1) == 0
+    assert bm.can_allocate_blocks(8)

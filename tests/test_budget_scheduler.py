@@ -224,3 +224,30 @@ def test_preempted_request_readmits_past_watermark():
     drive(sched, [], lambda plan, n: None)
     assert req.done and req not in sched.rejected
     assert len(req.output) == 6
+
+
+def test_concurrent_oversized_prefills_do_not_wedge_tiny_pool():
+    """Regression for the admit-then-starve race: admission used to check
+    the whole prompt against the INSTANTANEOUS free list, so two prompts
+    of 6 blocks each both passed on an 8-block pool; their lazy per-chunk
+    allocations then collided mid-prompt and — prefills never preempt —
+    every subsequent plan came back empty (wedge).  The admission
+    reservation makes the second prompt wait until the first one's
+    earmarked blocks are actually released."""
+    from repro.cache import BlockManager
+    bm = BlockManager(9, 4)                     # 8 usable, no watermark
+    sched = make_sched(chunk=4, slots=4, budget=8, block_manager=bm)
+    a = Request(prompt=[1] * 24, max_new_tokens=2)    # 6 blocks
+    b = Request(prompt=[1] * 24, max_new_tokens=2)    # 6 blocks
+    sched.submit(a)
+    sched.submit(b)
+    plan = sched.next_plan()
+    # only a admitted; its novel blocks are earmarked and b is held back
+    assert [c.req_id for c in plan.chunks] == [a.req_id]
+    assert bm.reserved_for(a.req_id) > 0
+    assert b in sched.waiting
+    drive(sched, [], lambda plan, n: None)      # would wedge pre-fix
+    assert a.done and len(a.output) == 2
+    assert b.done and len(b.output) == 2
+    assert b not in sched.rejected
+    assert bm.n_reserved == 0 and bm.n_used == 0

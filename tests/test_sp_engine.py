@@ -1,0 +1,214 @@
+"""Sequence-parallel (SP) activations: sp on/off equivalence over the
+tp x pp x backend grid, ragged packed tails, and the lane-padding rules.
+
+SP only changes WHERE the two per-layer TP collectives run (each
+all-reduce becomes a reduce-scatter before norm + residual and an
+all-gather before the next sharded matmul); GSPMD lowers both placements
+from the same program, so at equal tp the sp on/off token streams must
+agree EXACTLY — including packed token counts that do not divide tp
+(odd chunks, zero-decode and zero-chunk iterations), which exercise the
+pad-to-tp lane rule.  tp=1 with sp requested is the identity: the toggle
+self-disables and the unsharded path is untouched.  The numeric contract
+against the UNSHARDED reference stays the tp>1 tolerance tier pinned in
+``test_tp_engine.py`` (2e-5): SP adds no new tolerance.
+"""
+import dataclasses
+import itertools
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import repro.scheduler.request as request_mod
+from _prop import given, settings, strategies as st
+from repro import sharding as shd
+from repro.configs import get_config
+from repro.core import ChunkWork, DecodeWork, SamplingParams
+from repro.core.engine import Engine
+from repro.models import build_model
+from repro.scheduler import Request
+from repro.serving import Server
+
+_ATOL = _RTOL = 2e-5                 # the tp>1 tier — unchanged by SP
+
+_CFG = dataclasses.replace(
+    get_config("tinyllama-1.1b").reduced(), n_layers=4, d_model=32,
+    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+_PARAMS = None
+
+_PAGED_PALLAS = os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla") == "pallas"
+
+
+def _cfg_params():
+    global _PARAMS
+    if _PARAMS is None:
+        _PARAMS = build_model(_CFG).init_params(jax.random.PRNGKey(0))
+    return _CFG, _PARAMS
+
+
+def _need(n):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs >= {n} devices (conftest forces 8 unless an "
+               f"explicit XLA_FLAGS export pins fewer)")
+
+
+def _reqs(lens_and_decodes):
+    request_mod._ids = itertools.count()     # deterministic req ids
+    rng = np.random.default_rng(11)
+    return [Request(prompt=[int(t) for t in
+                            rng.integers(0, _CFG.vocab_size, p)],
+                    max_new_tokens=d)
+            for p, d in lens_and_decodes]
+
+
+_DEFAULT_WORK = ((13, 4), (7, 3), (21, 5), (6, 4), (9, 3))
+
+
+def _serve(sp, *, tp=2, pp=1, paged=False, chunk=7,
+           work=_DEFAULT_WORK, temperature=0.0):
+    """Greedy serve with an ODD chunk size: every chunked iteration packs
+    a ragged C + D token count, and the prefill-only head / decode-only
+    tail of the run cover the zero-decode and zero-chunk corners."""
+    cfg, params = _cfg_params()
+    srv = Server(cfg, params, policy="sarathi", chunk_size=chunk,
+                 n_slots=4, max_len=64, pp=pp, tp=tp, sp=sp, paged=paged,
+                 block_size=8, seed=7,
+                 sampling=SamplingParams(temperature=temperature))
+    return srv.run(_reqs(work)).outputs
+
+
+# ----------------------------------------------------------- tp=1 identity
+@pytest.mark.parametrize("paged", [False, True])
+def test_tp1_sp_request_is_identity(paged):
+    """sp=True at tp=1 self-disables: no sharding hint, no lane padding,
+    and the served tokens are bit-identical to the plain engine."""
+    cfg, params = _cfg_params()
+    eng = Engine(cfg, params, n_slots=2, max_len=64, chunk_size=7,
+                 decode_slots=3, tp=1, sp=True, paged=paged, block_size=8)
+    assert eng.sp is False and eng._sp_sharding is None
+    assert eng._lane_C == eng.C and eng._lane_D == eng.D
+    assert _serve(True, tp=1, paged=paged) == _serve(False, tp=1,
+                                                     paged=paged)
+
+
+# ------------------------------------------------------------ lane padding
+@_need(2)
+def test_sp_pads_lanes_to_tp_and_halves_activation_bytes():
+    """Pad-to-tp rule: odd chunk (7) and odd decode slots (3) round up to
+    the next multiple of tp for the compiled packed shapes ONLY — the
+    scheduler-facing budgets (C, D) keep their configured values — and
+    the reported per-iteration activation footprint shrinks by tp."""
+    cfg, params = _cfg_params()
+    mk = lambda sp: Engine(cfg, params, n_slots=4, max_len=64,
+                           chunk_size=7, decode_slots=3, tp=2, sp=sp)
+    on, off = mk(True), mk(False)
+    assert on.sp is True and on._sp_sharding is not None
+    assert (on.C, on.D) == (off.C, off.D) == (7, 3)
+    assert (on._lane_C, on._lane_D) == (8, 4)
+    assert (off._lane_C, off._lane_D) == (7, 3)
+    itemsize = np.dtype(on.dtype).itemsize
+    per_tok = 2 * cfg.n_layers * cfg.d_model * itemsize
+    assert off.activation_bytes_per_iteration() == 10 * per_tok
+    assert on.activation_bytes_per_iteration() == (12 // 2) * per_tok
+    assert on.activation_bytes_per_iteration() \
+        < off.activation_bytes_per_iteration()
+
+
+def test_pad_tokens_to_tp():
+    assert shd.pad_tokens_to_tp(7, 1) == 7
+    assert shd.pad_tokens_to_tp(7, 2) == 8
+    assert shd.pad_tokens_to_tp(8, 2) == 8
+    assert shd.pad_tokens_to_tp(0, 4) == 0
+    assert shd.pad_tokens_to_tp(9, 4) == 12
+
+
+# -------------------------------------------------- sp on/off exact match
+@_need(8)
+@pytest.mark.parametrize("pp", [1, 2])
+@pytest.mark.parametrize("tp", [1, 2])
+@pytest.mark.parametrize("paged", [False, True])
+def test_grid_sp_matches_sp_off_exactly(pp, tp, paged):
+    """The tentpole contract: at EQUAL tp, toggling SP changes only the
+    collective decomposition — greedy token streams are identical across
+    the whole pp x tp x backend grid, ragged odd-chunk packing included.
+    (Numerics vs the UNSHARDED reference remain the tp>1 2e-5 tier; SP
+    introduces no additional divergence to re-tier.)"""
+    assert _serve(True, tp=tp, pp=pp, paged=paged) == \
+        _serve(False, tp=tp, pp=pp, paged=paged)
+
+
+@_need(2)
+def test_sp_stochastic_sampling_matches_sp_off():
+    """temperature > 0 at equal tp: the PRNG chain is lane-padding
+    independent — the engine samples only the REAL decode rows, so the
+    categorical noise has the same shape (and threefry counters) sp on
+    and off, and these seeds agree token-for-token.  (Regression: sampling
+    the padded [lane_D, V] block changed every stochastic decode.)"""
+    assert _serve(True, temperature=1.0) == _serve(False, temperature=1.0)
+
+
+# ------------------------------------------------- ragged-tail properties
+@_need(2)
+@settings(deadline=None, max_examples=4)
+@given(
+    prompts=st.lists(st.integers(1, 25), min_size=1, max_size=4),
+    decode_len=st.integers(1, 5),
+    chunk=st.integers(1, 9),
+    paged=st.booleans(),
+)
+def test_property_ragged_tails_sp_invariant(prompts, decode_len, chunk,
+                                            paged):
+    """Property: ANY workload shape — prompts not divisible by the chunk,
+    chunk not divisible by tp, single-token prompts (zero-chunk decode
+    tails), prefill-only heads — serves identical tokens sp on/off at
+    tp=2, dense and paged."""
+    work = tuple((p, decode_len) for p in prompts)
+    on = _serve(True, paged=paged, chunk=chunk, work=work)
+    off = _serve(False, paged=paged, chunk=chunk, work=work)
+    assert on == off
+    assert all(len(v) == decode_len for v in on.values())
+
+
+# ------------------------------------------------------ logits tolerance
+@_need(2)
+@pytest.mark.parametrize("paged", [False, True])
+def test_sp_logits_within_tolerance_of_unsharded(paged):
+    """Numeric pin at the stack level: the packed step under the SP
+    sharding hint stays within the documented tp>1 tolerance of the
+    UNSHARDED reference — same tier as plain TP, no widening."""
+    cfg, params = _cfg_params()
+    model = build_model(cfg)
+    kw = dict(paged_blocks=17, block_size=8) if paged else {}
+    cache = model.init_cache(3, 64, jax.numpy.float32, **kw)
+    eng = Engine(cfg, params, n_slots=2, max_len=64, chunk_size=8,
+                 decode_slots=2, paged=paged, block_size=8)
+    eng.add_request(0)
+    eng.add_request(1)
+    # the hint is set directly (no engine lane padding): GSPMD shards
+    # the packed C + D = 10 token rows 5-per-chip under the constraint
+    pk = eng._pack(ChunkWork(0, [1, 2, 3, 4, 5], 0, True),
+                   [DecodeWork(1, 9, 3)])
+
+    def fwd(p, c):
+        cl, dl, _, _ = model.forward_packed(p, pk, c)
+        return cl, dl
+
+    ref_cl, ref_dl = jax.jit(fwd)(params, cache)
+    mesh = shd.make_tp_mesh(2)
+    sp_params = shd.shard_params(cfg, params, mesh)
+    sp_cache = shd.shard_cache(cfg, cache, mesh)
+    from repro.models import blocks as bk
+    from repro.models import stack as stack_mod
+    bk.set_paged_attn_mesh(mesh if (paged and _PAGED_PALLAS) else None)
+    stack_mod.set_packed_sp_sharding(shd.sp_activation_sharding(mesh))
+    try:
+        got_cl, got_dl = jax.jit(fwd)(sp_params, sp_cache)
+    finally:
+        bk.set_paged_attn_mesh(None)
+        stack_mod.set_packed_sp_sharding(None)
+    np.testing.assert_allclose(np.asarray(ref_cl), np.asarray(got_cl),
+                               atol=_ATOL, rtol=_RTOL)
+    np.testing.assert_allclose(np.asarray(ref_dl), np.asarray(got_dl),
+                               atol=_ATOL, rtol=_RTOL)

@@ -1,0 +1,141 @@
+"""Tile autotuner for the paged-attention Pallas kernels.
+
+Sweeps the three ``repro.kernels.ops`` env knobs against the parametric
+roofline bandwidth model (:func:`benchmarks.roofline.tile_variant_time`)
+and emits the fastest VALID (VMEM-fitting) configuration as recommended
+env defaults:
+
+* ``REPRO_PAGED_KV_PAGES``  — KV pages fetched per grid step (amortises
+  per-grid-step fixed cost; per-page DMA descriptors stay, the pool's
+  blocks are non-contiguous);
+* ``REPRO_PAGED_Q_BLOCK``   — prefill q-tile rows (fewer KV re-reads per
+  chunk at the price of a bigger VMEM q/o tile);
+* ``REPRO_PAGED_KV_BUFFERS`` — DMA buffers (1 serialises fetch and
+  compute, >= 2 overlaps them behind a pipeline fill).
+
+The model scores decode and prefill separately at the roofline module's
+fixed ``KERNEL_GEOM`` serving point and picks the configuration with the
+lowest decode + prefill time sum; points whose double-buffered working
+set exceeds the ~16 MB/core VMEM budget (``roofline.VMEM_BYTES``, pallas
+guide) are rejected as invalid rather than scored.  This is an analytical
+sweep — it runs in milliseconds on any machine and needs no accelerator —
+closing the ROADMAP residual that the env defaults wanted an autotune
+sweep behind them.
+
+    PYTHONPATH=src python -m tools.autotune_tiles
+    PYTHONPATH=src python -m tools.autotune_tiles --json tiles.json
+    eval $(PYTHONPATH=src python -m tools.autotune_tiles --env)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+from benchmarks.roofline import KERNEL_GEOM, VMEM_BYTES, tile_variant_time
+
+# sweep grid: powers of two around the kernels' current defaults
+KV_PAGES = (1, 2, 4, 8, 16)
+Q_BLOCKS = (32, 64, 128, 256)
+N_BUFFERS = (1, 2, 3, 4)
+
+
+def sweep() -> List[Dict]:
+    """Every (kv_pages, q_block, n_buffers) grid point with its modelled
+    decode + prefill times; invalid (VMEM-exceeding) points carry
+    ``valid=False`` and no times."""
+    rows = []
+    for kp in KV_PAGES:
+        for qb in Q_BLOCKS:
+            for nb in N_BUFFERS:
+                dec = tile_variant_time("decode", kv_pages=kp, q_block=qb,
+                                        n_buffers=nb)
+                pre = tile_variant_time("prefill", kv_pages=kp, q_block=qb,
+                                        n_buffers=nb)
+                row = {"kv_pages": kp, "q_block": qb, "n_buffers": nb,
+                       "valid": dec is not None and pre is not None}
+                if row["valid"]:
+                    row.update(
+                        decode_s=dec["time_s"], prefill_s=pre["time_s"],
+                        total_s=dec["time_s"] + pre["time_s"],
+                        vmem_bytes=max(dec["vmem_bytes"],
+                                       pre["vmem_bytes"]))
+                rows.append(row)
+    return rows
+
+
+def best(rows: Optional[List[Dict]] = None) -> Dict:
+    """The recommended configuration: lowest modelled decode + prefill
+    time among the VMEM-valid sweep points (ties break toward the
+    smallest working set, then the smallest knob values — prefer the
+    least VMEM pressure for equal speed)."""
+    rows = sweep() if rows is None else rows
+    valid = [r for r in rows if r["valid"]]
+    if not valid:
+        raise RuntimeError("no VMEM-valid tile configuration in the grid")
+    return min(valid, key=lambda r: (r["total_s"], r["vmem_bytes"],
+                                     r["kv_pages"], r["q_block"],
+                                     r["n_buffers"]))
+
+
+def recommendation() -> Dict:
+    """The machine-readable artifact: sweep geometry, the winning point,
+    and the env-var mapping ``repro.kernels.ops`` reads."""
+    rows = sweep()
+    b = best(rows)
+    return {
+        "geometry": dict(KERNEL_GEOM),
+        "vmem_budget_bytes": VMEM_BYTES,
+        "n_swept": len(rows),
+        "n_valid": sum(r["valid"] for r in rows),
+        "best": b,
+        "env": {
+            "REPRO_PAGED_KV_PAGES": str(b["kv_pages"]),
+            "REPRO_PAGED_Q_BLOCK": str(b["q_block"]),
+            "REPRO_PAGED_KV_BUFFERS": str(b["n_buffers"]),
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None,
+                    help="write the full recommendation (sweep geometry + "
+                         "winning point + env mapping) to this path")
+    ap.add_argument("--env", action="store_true",
+                    help="print only shell 'export K=V' lines (for "
+                         "eval $(...))")
+    ap.add_argument("--top", type=int, default=5,
+                    help="also list the N fastest valid points")
+    args = ap.parse_args(argv)
+
+    rec = recommendation()
+    if args.env:
+        for k, v in rec["env"].items():
+            print(f"export {k}={v}")
+    else:
+        rows = sweep()
+        valid = sorted((r for r in rows if r["valid"]),
+                       key=lambda r: r["total_s"])
+        print(f"# swept {rec['n_swept']} points, {rec['n_valid']} fit the "
+              f"{VMEM_BYTES // (1024 * 1024)} MB VMEM budget")
+        print("kv_pages,q_block,n_buffers,decode_us,prefill_us,total_us,"
+              "vmem_kb")
+        for r in valid[:max(args.top, 1)]:
+            print(f"{r['kv_pages']},{r['q_block']},{r['n_buffers']},"
+                  f"{r['decode_s'] * 1e6:.1f},{r['prefill_s'] * 1e6:.1f},"
+                  f"{r['total_s'] * 1e6:.1f},{r['vmem_bytes'] // 1024}")
+        b = rec["best"]
+        print(f"# recommended: REPRO_PAGED_KV_PAGES={b['kv_pages']} "
+              f"REPRO_PAGED_Q_BLOCK={b['q_block']} "
+              f"REPRO_PAGED_KV_BUFFERS={b['n_buffers']}")
+    if args.json:
+        import pathlib
+        pathlib.Path(args.json).write_text(json.dumps(rec, indent=1))
+        print(f"# wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
