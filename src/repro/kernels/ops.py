@@ -22,10 +22,11 @@ The fused-paged kernels' tile knobs are env-tunable:
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
+
+from repro import env
 
 NEG = -1e30
 
@@ -41,33 +42,24 @@ def resolve_interpret() -> bool:
     """Interpret-vs-compile for the Pallas kernels: compiled natively on a
     TPU backend, interpreted elsewhere (CPU CI), with
     ``REPRO_PALLAS_INTERPRET=0|1`` forcing either mode."""
-    v = os.environ.get("REPRO_PALLAS_INTERPRET", "auto")
+    v = env.get("REPRO_PALLAS_INTERPRET")
     if v in ("0", "false"):
         return False
     if v in ("1", "true"):
         return True
-    if v != "auto":
-        raise ValueError(f"REPRO_PALLAS_INTERPRET={v!r}: use 0, 1 or auto")
     return not _on_tpu()
 
 
-def _env_pos_int(name: str, default: int) -> int:
-    v = int(os.environ.get(name, default))
-    if v < 1:
-        raise ValueError(f"{name}={v}: must be >= 1")
-    return v
-
-
 def paged_kv_pages() -> int:
-    return _env_pos_int("REPRO_PAGED_KV_PAGES", 1)
+    return env.get("REPRO_PAGED_KV_PAGES")
 
 
 def paged_n_buffers() -> int:
-    return _env_pos_int("REPRO_PAGED_KV_BUFFERS", 2)
+    return env.get("REPRO_PAGED_KV_BUFFERS")
 
 
 def paged_q_block() -> int:
-    return _env_pos_int("REPRO_PAGED_Q_BLOCK", 128)
+    return env.get("REPRO_PAGED_Q_BLOCK")
 
 
 # --------------------------------------------------------------------------

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production meshes and extract memory / FLOP / collective statistics.
 
@@ -16,6 +12,7 @@ cost_analysis / memory_analysis / HLO collective bytes feed EXPERIMENTS.md
 §Dry-run and §Roofline.
 """
 import argparse
+import os
 import json
 import pathlib
 import re
@@ -25,6 +22,7 @@ import traceback
 
 import jax
 
+from repro import env
 from repro.configs import ASSIGNED, get_config
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_production_mesh
@@ -88,7 +86,7 @@ def run_one(arch: str, shape: str, multi_pod: bool, variant: str = "",
         # REPRO_SCAN_UNROLL=1 makes cost_analysis count every layer (the
         # roofline pass); the rolled pass is the deployable artifact whose
         # memory_analysis matters.
-        "unrolled": bool(int(os.environ.get("REPRO_SCAN_UNROLL", "0"))),
+        "unrolled": env.get("REPRO_SCAN_UNROLL"),
     }
     ok, why = sh.shape_supported(cfg, shape)
     if not ok:
@@ -141,7 +139,24 @@ def run_one(arch: str, shape: str, multi_pod: bool, variant: str = "",
     return report
 
 
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int = 512) -> None:
+    """Merge ``--xla_force_host_platform_device_count=n`` into XLA_FLAGS
+    unless the caller already forces a device count.  Called from the CLI
+    entrypoint (before the lazy XLA backend init reads the flag) instead
+    of mutating ``os.environ`` unconditionally at import time — importing
+    this module must not clobber a caller's flags depending on import
+    order."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _DEVICE_COUNT_FLAG in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"{_DEVICE_COUNT_FLAG}={n} {flags}".strip()
+
+
 def main(argv=None):
+    ensure_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=sorted(ASSIGNED) + [None])
     ap.add_argument("--variant", default="")

@@ -80,11 +80,10 @@ def make_decode_step_fn(cfg: ModelConfig, decode_act_reshard: bool = None):
     constrain layer-boundary activations to d-model-sharded layout so the
     per-layer collective is O(activations), not an O(weights) all-gather.
     Defaults on for FSDP archs; REPRO_DECODE_ACT_RESHARD=0 disables."""
-    import os
+    from repro import env
     if decode_act_reshard is None:
         decode_act_reshard = (
-            sh.use_fsdp(cfg)
-            and os.environ.get("REPRO_DECODE_ACT_RESHARD", "1") == "1")
+            sh.use_fsdp(cfg) and env.get("REPRO_DECODE_ACT_RESHARD"))
     stack.set_cache_activation_spec(
         P(None, None, "data") if decode_act_reshard else None)
 
@@ -131,15 +130,14 @@ def build_dryrun(cfg: ModelConfig, shape_name: str, mesh,
                  dtype=jnp.bfloat16) -> Tuple[Any, tuple, dict]:
     """-> (step_fn, arg ShapeDtypeStructs, metadata).  Nothing is allocated;
     params/cache/optimizer are eval_shape stand-ins with NamedShardings."""
-    import os
+    from repro import env
     from repro.models import blocks as bk
     ok, why = sh.shape_supported(cfg, shape_name)
     if not ok:
         raise ValueError(why)
     # §Perf iteration 1: shard the MoE dispatch buffer (REPRO_MOE_DISPATCH
     # _SHARD=0 restores the replicated baseline)
-    if cfg.n_experts and os.environ.get("REPRO_MOE_DISPATCH_SHARD",
-                                        "1") == "1":
+    if cfg.n_experts and env.get("REPRO_MOE_DISPATCH_SHARD"):
         bk.set_moe_dispatch_spec(P("data"),
                                  shards=sh.batch_axis_size(mesh))
     else:

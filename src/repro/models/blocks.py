@@ -164,9 +164,9 @@ def cross_batched(cfg, p, x, cache, *, memory=None):
 
 
 # ------------------------------------------------------------ packed: attn
-import os
+from repro import env
 
-_PAGED_ATTN_BACKENDS = ("xla", "pallas")
+_PAGED_ATTN_BACKENDS = env.REGISTRY["REPRO_PAGED_ATTN_BACKEND"].choices
 
 # Mesh hint for the paged Pallas kernels under tensor parallelism.  GSPMD
 # cannot partition a pallas_call, so when a TP engine runs the pallas
@@ -186,14 +186,9 @@ def _paged_attn_backend() -> str:
     """Attention backend for the paged packed path: "xla" (portable gather
     + blocked flash attention, the default) or "pallas" (the block-table
     scalar-prefetch kernels of repro.kernels — native on TPU, interpret
-    mode elsewhere).  Unrecognized values raise instead of silently
-    falling through to xla."""
-    v = os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla")
-    if v not in _PAGED_ATTN_BACKENDS:
-        raise ValueError(
-            f"REPRO_PAGED_ATTN_BACKEND={v!r} is not a paged attention "
-            f"backend; allowed: {_PAGED_ATTN_BACKENDS}")
-    return v
+    mode elsewhere).  Unrecognized values raise (in the registry's typed
+    read) instead of silently falling through to xla."""
+    return env.get("REPRO_PAGED_ATTN_BACKEND")
 
 
 def _paged_shard_mesh(pool_kv):

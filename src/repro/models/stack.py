@@ -325,7 +325,7 @@ def _unembed(cfg, params, x):
     return x @ params["unembed"]
 
 
-import os
+from repro import env
 
 # Optional sequence-parallel sharding constraint applied to the residual
 # stream at every group boundary in TRAIN mode (Megatron sequence
@@ -412,7 +412,7 @@ def _scan_unroll() -> int | bool:
     """REPRO_SCAN_UNROLL=1 fully unrolls the layer scan — used by the
     roofline pass so compiled.cost_analysis() counts every layer (XLA does
     not multiply loop bodies by trip count)."""
-    return bool(int(os.environ.get("REPRO_SCAN_UNROLL", "0")))
+    return env.get("REPRO_SCAN_UNROLL")
 
 
 def _run_layers(cfg, params, cache, x, apply_fn, remat: bool):

@@ -39,6 +39,15 @@ DATA = "data"
 # only when neither mesh= nor an explicit axis size is given
 DEFAULT_AXIS = 16
 
+# Leaf names for which the fall-through replicate rule is INTENTIONAL.
+# The static analyzer (tools/analysis, pass sharding-rules) builds every
+# arch's param + cache pytree and requires each leaf name to be matched by
+# an explicit rule branch below or declared here — so a new cache/param
+# leaf can never silently replicate under TP again (the `pkv` pool leaf
+# did exactly that until PR 4 caught it by hand).
+PARAM_REPLICATED_OK = frozenset({"final_norm", "ln1", "ln2", "lnc"})
+CACHE_REPLICATED_OK = frozenset()
+
 
 def mesh_axis(mesh, name: str) -> int:
     """Size of mesh axis ``name``; 0 when the mesh lacks it (a 0-sized
@@ -219,16 +228,13 @@ def kv_shard_mode() -> str:
     * "hd": shard head_dim — 16x storage cut but XLA all-gathers the cache
       (or all-reduces scores) per layer;
     * "none": paper-faithful replicated baseline.
-    Set REPRO_SHARD_KV=seq|hd|none.
+
+    Set REPRO_SHARD_KV=seq|hd|none (registry-validated: anything else
+    raises instead of silently acting like "none"; the legacy
+    REPRO_SHARD_KV_HD spelling still resolves, with a DeprecationWarning).
     """
-    import os
-    v = os.environ.get("REPRO_SHARD_KV",
-                       os.environ.get("REPRO_SHARD_KV_HD", "seq"))
-    if v == "1":
-        return "hd"
-    if v == "0":
-        return "none"
-    return v
+    from repro import env
+    return env.get("REPRO_SHARD_KV")
 
 
 def cache_pspecs(cfg: ModelConfig, shapes, *,

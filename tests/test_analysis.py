@@ -1,0 +1,360 @@
+"""Self-tests for the house-invariant static analyzer (tools/analysis).
+
+Each AST pass gets planted-violation fixtures (fed as in-memory
+:class:`SourceFile` snippets) pinning exactly what it catches and what it
+deliberately lets through, plus the meta-test that matters most: the
+analyzer runs CLEAN over this repo — the CI gate.
+"""
+import pathlib
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:        # `tools` is a repo-root package
+    sys.path.insert(0, str(ROOT))
+
+from repro import env                                    # noqa: E402
+from tools import analysis                               # noqa: E402
+from tools.analysis import (donation, env_knobs,         # noqa: E402
+                            knob_docs, prng, sharding_rules)
+from tools.analysis.core import SourceFile               # noqa: E402
+
+
+def snippet(text, path="src/repro/fake.py"):
+    return [SourceFile(path, textwrap.dedent(text))]
+
+
+def ids(findings):
+    return [(f.pass_id, f.line) for f in findings]
+
+
+# ---------------------------------------------------------------- env-knobs
+
+def test_env_pass_flags_direct_reads():
+    fs = snippet("""\
+        import os
+        a = os.environ.get("REPRO_PAGED_KV_PAGES", "1")
+        b = os.getenv("REPRO_SCAN_UNROLL")
+        c = os.environ["REPRO_SHARD_KV"]
+        d = os.environ.setdefault("REPRO_PAGED_Q_BLOCK", "64")
+        """)
+    assert ids(env_knobs.run(fs)) == [("env-knobs", 2), ("env-knobs", 3),
+                                      ("env-knobs", 4), ("env-knobs", 5)]
+
+
+def test_env_pass_lets_legal_code_through():
+    fs = snippet("""\
+        import os
+        from repro import env
+        os.environ["REPRO_SHARD_KV"] = "hd"        # writes configure
+        xla = os.environ.get("XLA_FLAGS", "")      # non-REPRO names free
+        v = env.get("REPRO_SHARD_KV")              # the legal read
+        """)
+    assert env_knobs.run(fs) == []
+
+
+def test_env_pass_allows_the_registry_itself():
+    fs = snippet("""\
+        import os
+        raw = os.environ.get("REPRO_SHARD_KV")
+        """, path="src/repro/env.py")
+    assert env_knobs.run(fs) == []
+
+
+def test_env_pass_flags_unregistered_knob_name():
+    fs = snippet("""\
+        from repro import env
+        v = env.get("REPRO_NO_SUCH_KNOB")
+        """)
+    (f,) = env_knobs.run(fs)
+    assert "not a registered knob" in f.message and f.line == 2
+
+
+def test_suppression_comment_silences_one_pass():
+    fs = snippet("""\
+        import os
+        a = os.environ.get("REPRO_SHARD_KV")  # repro: ignore[env-knobs]
+        b = os.environ.get("REPRO_SHARD_KV")  # repro: ignore[prng]
+        """)
+    from tools.analysis.core import filter_suppressed
+    kept = filter_suppressed(env_knobs.run(fs), fs)
+    assert ids(kept) == [("env-knobs", 3)]   # wrong pass id doesn't hide
+
+
+# ----------------------------------------------------------------- donation
+
+def test_donation_flags_read_after_donating_call():
+    fs = snippet("""\
+        import jax
+
+        step = jax.jit(_step, donate_argnums=(1,))
+
+        def run(tokens, cache):
+            out = step(tokens, cache)
+            return out, cache.shape
+        """)
+    (f,) = donation.run(fs)
+    assert f.pass_id == "donation" and f.line == 7
+    assert "cache" in f.message and "line 6" in f.message
+
+
+def test_donation_same_statement_rebind_is_clean():
+    fs = snippet("""\
+        import jax
+
+        step = jax.jit(_step, donate_argnums=(1,))
+
+        def run(tokens, cache):
+            out, cache = step(tokens, cache)
+            return out, cache
+        """)
+    assert donation.run(fs) == []
+
+
+def test_donation_tracks_self_attributes_across_branches():
+    fs = snippet("""\
+        import jax
+
+        class Engine:
+            def __init__(self, fn):
+                self.step = jax.jit(fn, donate_argnums=(0, 2))
+
+            def execute(self, plan):
+                if plan.packed:
+                    self.cache = self.step(self.cache, plan, self.state)
+                else:
+                    out = self.step(self.cache, plan, self.state)
+                return self.state
+        """)
+    # self.state donated on BOTH arms, never rebound -> read on return
+    # flagged; self.cache rebound on one arm but not the other -> the
+    # merge keeps it donated, yet nothing reads it after, so one finding.
+    (f,) = donation.run(fs)
+    assert "self.state" in f.message and f.line == 12
+
+
+def test_donation_dynamic_argnums_out_of_reach():
+    fs = snippet("""\
+        import jax
+
+        step = jax.jit(_step, donate_argnums=tuple(range(n)))
+
+        def run(tokens, cache):
+            out = step(tokens, cache)
+            return cache
+        """)
+    assert donation.run(fs) == []
+
+
+# --------------------------------------------------------------------- prng
+
+def test_prng_flags_key_consumed_twice():
+    fs = snippet("""\
+        import jax
+
+        def init(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))
+            return a + b
+        """)
+    (f,) = prng.run(fs)
+    assert f.pass_id == "prng" and f.line == 5
+    assert "already consumed on line 4" in f.message
+
+
+def test_prng_split_rebind_is_clean():
+    fs = snippet("""\
+        import jax
+
+        def init(key):
+            key, sub = jax.random.split(key)
+            a = jax.random.normal(sub, (4,))
+            key, sub = jax.random.split(key)
+            b = jax.random.normal(sub, (4,))
+            return a + b
+        """)
+    assert prng.run(fs) == []
+
+
+def test_prng_proven_key_consumed_by_any_call():
+    fs = snippet("""\
+        import jax
+
+        def init_params(cfg):
+            ks = jax.random.split(jax.random.PRNGKey(0), 2)
+            wq = init_dense(ks[0], cfg)
+            wk = init_dense(ks[0], cfg)
+            return wq, wk
+        """)
+    (f,) = prng.run(fs)
+    assert "ks[0]" in f.message and f.line == 6
+
+
+def test_prng_branches_do_not_interact():
+    fs = snippet("""\
+        import jax
+
+        def init_layer(kind, cfg):
+            ks = jax.random.split(jax.random.PRNGKey(0), 2)
+            if kind == "attn":
+                p = init_attn(ks[0], cfg)
+            elif kind == "ssd":
+                p = init_ssd(ks[0], cfg)
+            else:
+                p = init_rglru(ks[0], cfg)
+            return p
+        """)
+    assert prng.run(fs) == []
+
+
+def test_prng_branch_consumption_survives_the_merge():
+    fs = snippet("""\
+        import jax
+
+        def init(key, deep):
+            if deep:
+                a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))
+            return b
+        """)
+    (f,) = prng.run(fs)
+    assert f.line == 6 and "line 5" in f.message
+
+
+def test_prng_nonrandom_key_param_not_flagged():
+    fs = snippet("""\
+        def lookup(table, key):
+            a = table.get(key)
+            b = table.get(key)
+            return a or b
+        """)
+    assert prng.run(fs) == []
+
+
+# ----------------------------------------------------------- sharding-rules
+
+def test_sharding_rule_extraction_matches_policy():
+    src = (ROOT / sharding_rules.POLICY_PATH).read_text()
+    rules = sharding_rules.extract_rule_names(src, "cache_pspecs")
+    assert "pkv" in rules and "k" in rules and "v" in rules
+    assert sharding_rules.extract_rule_names(src, "param_pspecs")
+
+
+def test_sharding_check_tree_flags_unmatched_leaf():
+    import jax
+    tree = {"layers": {"k": jax.ShapeDtypeStruct((2, 2), "float32"),
+                       "mystery": jax.ShapeDtypeStruct((2, 2), "float32")}}
+    findings = sharding_rules.check_tree(
+        tree, rules={"k"}, default_ok=set(),
+        kind="cache[dense]", arch="fake", path="p.py", line=3)
+    (f,) = findings
+    assert "'mystery'" in f.message and "silently replicate" in f.message
+    assert sharding_rules.check_tree(
+        tree, rules={"k"}, default_ok={"mystery"},
+        kind="cache[dense]", arch="fake", path="p.py", line=3) == []
+
+
+# ---------------------------------------------------------------- knob-docs
+
+def test_knob_docs_detects_drift_and_missing_block():
+    table = env.format_knob_table()
+    good = f"# readme\n{knob_docs.BEGIN}\n{table}\n{knob_docs.END}\n"
+    assert knob_docs.check_text(good, table) == []
+    drifted = good.replace("REPRO_SHARD_KV", "REPRO_SHARD_KV_RENAMED")
+    (f,) = knob_docs.check_text(drifted, table)
+    assert "drifted" in f.message
+    (f,) = knob_docs.check_text("# readme, no table\n", table)
+    assert "no" in f.message and knob_docs.BEGIN in f.message
+
+
+# ------------------------------------------------------------ the registry
+
+def test_registry_validates_choices(monkeypatch):
+    monkeypatch.setenv("REPRO_SHARD_KV", "junk")
+    with pytest.raises(ValueError, match="REPRO_SHARD_KV.*seq, hd, none"):
+        env.get("REPRO_SHARD_KV")
+
+
+def test_registry_maps_legacy_aliases(monkeypatch):
+    monkeypatch.setenv("REPRO_SHARD_KV", "1")    # legacy spelling of hd
+    assert env.get("REPRO_SHARD_KV") == "hd"
+    monkeypatch.setenv("REPRO_SHARD_KV", "0")
+    assert env.get("REPRO_SHARD_KV") == "none"
+
+
+def test_registry_legacy_name_warns(monkeypatch):
+    monkeypatch.delenv("REPRO_SHARD_KV", raising=False)
+    monkeypatch.setenv("REPRO_SHARD_KV_HD", "1")
+    with pytest.warns(DeprecationWarning, match="REPRO_SHARD_KV_HD"):
+        assert env.get("REPRO_SHARD_KV") == "hd"
+    # canonical name wins over the legacy one, without a warning
+    monkeypatch.setenv("REPRO_SHARD_KV", "seq")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert env.get("REPRO_SHARD_KV") == "seq"
+
+
+def test_registry_int_bounds_and_types(monkeypatch):
+    monkeypatch.setenv("REPRO_PAGED_KV_PAGES", "0")
+    with pytest.raises(ValueError, match="REPRO_PAGED_KV_PAGES"):
+        env.get("REPRO_PAGED_KV_PAGES")
+    monkeypatch.setenv("REPRO_PAGED_KV_PAGES", "3")
+    assert env.get("REPRO_PAGED_KV_PAGES") == 3
+    monkeypatch.setenv("REPRO_SCAN_UNROLL", "true")
+    assert env.get("REPRO_SCAN_UNROLL") is True
+    with pytest.raises(KeyError, match="not a registered"):
+        env.get("REPRO_NOT_A_KNOB")
+
+
+def test_registry_table_covers_every_knob():
+    table = env.format_knob_table()
+    for name in env.REGISTRY:
+        assert f"`{name}`" in table
+
+
+# ----------------------------------------------------- dryrun import hygiene
+
+def test_dryrun_import_does_not_mutate_environ(monkeypatch):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    for mod in [m for m in list(sys.modules) if "dryrun" in m]:
+        del sys.modules[mod]
+    import os
+
+    import repro.launch.dryrun as dryrun
+    assert "XLA_FLAGS" not in os.environ    # mutation moved into main()
+
+    dryrun.ensure_host_devices(16)
+    assert "--xla_force_host_platform_device_count=16" \
+        in os.environ["XLA_FLAGS"]
+    # an explicit setting stays authoritative
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=4")
+    dryrun.ensure_host_devices(16)
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=4"
+
+
+# -------------------------------------------------------- repo-wide + CLI
+
+def test_repo_is_clean():
+    """The CI gate: zero findings over this checkout."""
+    findings = analysis.run_passes()
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_unknown_pass_id_rejected():
+    with pytest.raises(ValueError, match="unknown passes"):
+        analysis.run_passes(passes=["no-such-pass"])
+
+
+def test_cli_knob_table_roundtrip():
+    out = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--knob-table"],
+        cwd=ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert out.returncode == 0
+    assert out.stdout.strip() == env.format_knob_table().strip()

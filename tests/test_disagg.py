@@ -10,7 +10,6 @@ the reserved scratch block 0 is never transferred.
 """
 import dataclasses
 import itertools
-import os
 
 import jax
 import numpy as np
@@ -18,6 +17,7 @@ import pytest
 from _prop import given, settings, strategies as st
 
 import repro.scheduler.request as request_mod
+from repro import env
 from repro.cache import BlockManager
 from repro.configs import get_config
 from repro.core.engine import (Engine, _extract_state, _install_state)
@@ -114,8 +114,7 @@ def test_disagg_tp2_bit_identical_to_tp2_monolithic(paged):
     """tp=2 replicas vs the tp=2 monolithic engine: BOTH sides run the
     same sharded compute, so disaggregation adds no divergence on top of
     the documented TP tolerance tier — outputs are bit-identical."""
-    if paged and os.environ.get("REPRO_PAGED_ATTN_BACKEND",
-                                "xla") == "pallas":
+    if paged and env.get("REPRO_PAGED_ATTN_BACKEND") == "pallas":
         pytest.skip("tp>1 rejects the paged pallas backend")
     res = _disagg_outputs(paged, tp=2)
     assert res.outputs == _ref_outputs(paged, tp=2)

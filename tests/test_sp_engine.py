@@ -14,7 +14,6 @@ against the UNSHARDED reference stays the tp>1 tolerance tier pinned in
 """
 import dataclasses
 import itertools
-import os
 
 import jax
 import numpy as np
@@ -22,6 +21,7 @@ import pytest
 
 import repro.scheduler.request as request_mod
 from _prop import given, settings, strategies as st
+from repro import env
 from repro import sharding as shd
 from repro.configs import get_config
 from repro.core import ChunkWork, DecodeWork, SamplingParams
@@ -37,7 +37,7 @@ _CFG = dataclasses.replace(
     n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
 _PARAMS = None
 
-_PAGED_PALLAS = os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla") == "pallas"
+_PAGED_PALLAS = env.get("REPRO_PAGED_ATTN_BACKEND") == "pallas"
 
 
 def _cfg_params():

@@ -1,0 +1,83 @@
+"""House-invariant static analyzer (``python -m tools.analysis``).
+
+The repo's correctness story rests on conventions — registry-routed env
+knobs, donation safety in the packed step, sharding-rule completeness,
+PRNG key discipline — that used to live in reviewers' memories.  Each is
+now a machine-checked pass:
+
+========================  ==================================================
+pass id                   invariant
+========================  ==================================================
+``env-knobs``             every ``REPRO_*`` read goes through
+                          ``repro.env.get`` (typed, validated, documented)
+``donation``              no reads of a ``jax.jit(donate_argnums=...)``
+                          argument's binding after the donating call
+``sharding-rules``        every param/cache pytree leaf of every arch
+                          (dense + paged) matches an explicit policy rule
+                          or a declared replicated-OK name
+``prng``                  no ``jax.random`` key consumed twice without an
+                          interleaving ``split``/``fold_in``
+``knob-docs``             the README knob table matches the registry
+========================  ==================================================
+
+Findings carry ``file:line``, the pass id and a severity; a
+``# repro: ignore[pass-id]`` comment on the flagged line suppresses (the
+audit trail for deliberate exceptions).  Exit status is nonzero on any
+unsuppressed error finding — CI gates on it.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+from typing import Dict, Iterable, List, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+if str(ROOT / "src") not in sys.path:        # repro.* for the live passes
+    sys.path.insert(0, str(ROOT / "src"))
+
+from tools.analysis import (          # noqa: E402
+    donation, env_knobs, knob_docs, prng, sharding_rules)
+from tools.analysis.core import (     # noqa: E402
+    Finding, SourceFile, filter_suppressed, load_files)
+
+# Directories each syntactic pass scans.  The env pass also covers
+# benchmarks/tools/examples (knob reads must not bypass the registry
+# anywhere the library is driven from); donation/prng bind src only —
+# tests exercise violations deliberately.
+SRC_DIRS = ("src",)
+ENV_DIRS = ("src", "benchmarks", "tools", "examples")
+
+PASS_IDS = (env_knobs.PASS_ID, donation.PASS_ID, sharding_rules.PASS_ID,
+            prng.PASS_ID, knob_docs.PASS_ID)
+
+
+def run_passes(root: Optional[pathlib.Path] = None,
+               passes: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Run the selected passes (default: all) against ``root``; returns
+    the unsuppressed findings, sorted by location."""
+    root = pathlib.Path(root) if root is not None else ROOT
+    selected = set(passes) if passes is not None else set(PASS_IDS)
+    unknown = selected - set(PASS_IDS)
+    if unknown:
+        raise ValueError(f"unknown passes {sorted(unknown)}; "
+                         f"available: {list(PASS_IDS)}")
+
+    files_cache: Dict[tuple, List[SourceFile]] = {}
+
+    def files_for(dirs) -> List[SourceFile]:
+        if dirs not in files_cache:
+            files_cache[dirs] = load_files(root, dirs)
+        return files_cache[dirs]
+
+    findings: List[Finding] = []
+    if env_knobs.PASS_ID in selected:
+        findings.extend(env_knobs.run(files_for(ENV_DIRS)))
+    if donation.PASS_ID in selected:
+        findings.extend(donation.run(files_for(SRC_DIRS)))
+    if prng.PASS_ID in selected:
+        findings.extend(prng.run(files_for(SRC_DIRS)))
+    if sharding_rules.PASS_ID in selected:
+        findings.extend(sharding_rules.run(root))
+    if knob_docs.PASS_ID in selected:
+        findings.extend(knob_docs.run(root))
+    return filter_suppressed(findings, files_for(ENV_DIRS))

@@ -1,0 +1,59 @@
+"""CLI for the house-invariant static analyzer.
+
+Usage:
+    python -m tools.analysis                    # run every pass, exit 1
+                                                # on any finding
+    python -m tools.analysis --passes prng,donation
+    python -m tools.analysis --json findings.json
+    python -m tools.analysis --knob-table       # print the README env-
+                                                # knob reference table
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.analysis import PASS_IDS, ROOT, run_passes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="house-invariant static analyzer")
+    ap.add_argument("--passes", default=None,
+                    help=f"comma-separated pass ids "
+                         f"(default: all of {','.join(PASS_IDS)})")
+    ap.add_argument("--root", default=None,
+                    help="repo root to analyze (default: this checkout)")
+    ap.add_argument("--json", default=None,
+                    help="also write findings as JSON here")
+    ap.add_argument("--knob-table", action="store_true",
+                    help="print the env-knob reference table generated "
+                         "from repro/env.py and exit")
+    args = ap.parse_args(argv)
+
+    if args.knob_table:
+        from repro import env
+        print(env.format_knob_table())
+        return 0
+
+    passes = ([p.strip() for p in args.passes.split(",") if p.strip()]
+              if args.passes else None)
+    findings = run_passes(root=args.root, passes=passes)
+
+    for f in findings:
+        print(f.format())
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(
+            [f.__dict__ for f in findings], indent=2))
+    n_err = sum(f.severity == "error" for f in findings)
+    ran = ",".join(passes) if passes else "all"
+    print(f"== tools.analysis [{ran}] over {args.root or ROOT}: "
+          f"{len(findings)} finding(s), {n_err} error(s) ==")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

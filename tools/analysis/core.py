@@ -1,0 +1,196 @@
+"""Pass framework for the house-invariant static analyzer.
+
+A *pass* inspects the repo (AST for the syntactic passes, live pytrees for
+the sharding pass) and emits :class:`Finding`s carrying ``file:line``, a
+stable pass id, a severity and a message.  A finding is suppressed by a
+``# repro: ignore[pass-id]`` comment on its line (or
+``ignore[pass-a,pass-b]`` for several passes) — suppressions are the audit
+trail for deliberate exceptions, so they live next to the code they
+excuse.
+
+Passes operate on :class:`SourceFile` units (path + text + parsed AST), so
+the self-tests can feed planted-violation snippets as strings without
+touching the real tree.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Set
+
+SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore\[([\w,-]+)\]")
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_id: str
+    path: str
+    line: int
+    message: str
+    severity: str = "error"
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.pass_id}] "
+                f"{self.severity}: {self.message}")
+
+
+class SourceFile:
+    """One analyzed file: raw text, parse-on-demand AST, and the set of
+    pass ids suppressed per line."""
+
+    def __init__(self, path: str, text: str):
+        self.path = str(path)
+        self.text = text
+        self._tree: Optional[ast.AST] = None
+        self._suppressed: Optional[Dict[int, Set[str]]] = None
+
+    @property
+    def tree(self) -> ast.AST:
+        if self._tree is None:
+            self._tree = ast.parse(self.text, filename=self.path)
+        return self._tree
+
+    @property
+    def suppressed(self) -> Dict[int, Set[str]]:
+        if self._suppressed is None:
+            out: Dict[int, Set[str]] = {}
+            for i, line in enumerate(self.text.splitlines(), start=1):
+                m = SUPPRESS_RE.search(line)
+                if m:
+                    out[i] = {p.strip() for p in m.group(1).split(",")}
+            self._suppressed = out
+        return self._suppressed
+
+    def allows(self, finding: Finding) -> bool:
+        """True when the finding survives this file's suppressions."""
+        ids = self.suppressed.get(finding.line, ())
+        return not (finding.pass_id in ids or "all" in ids)
+
+
+def load_files(root: pathlib.Path,
+               subdirs: Iterable[str]) -> List[SourceFile]:
+    """Every ``*.py`` under ``root/<subdir>`` (sorted, pycache skipped)."""
+    files = []
+    for sub in subdirs:
+        base = root / sub
+        if not base.exists():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            files.append(SourceFile(str(p.relative_to(root)),
+                                    p.read_text()))
+    return files
+
+
+def filter_suppressed(findings: Iterable[Finding],
+                      files: Iterable[SourceFile]) -> List[Finding]:
+    by_path = {f.path: f for f in files}
+    out = []
+    for f in findings:
+        sf = by_path.get(f.path)
+        if sf is None or sf.allows(f):
+            out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.pass_id))
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+SCOPE_BOUNDARY = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                  ast.ClassDef)
+
+
+def own_exprs(stmt: ast.stmt):
+    """The expression roots evaluated BY a statement itself — compound
+    statements contribute only their headers (their nested blocks are
+    walked separately, branch-aware, by :class:`BlockSim`)."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter, stmt.target]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        roots = []
+        for item in stmt.items:
+            roots.append(item.context_expr)
+            if item.optional_vars is not None:
+                roots.append(item.optional_vars)
+        return roots
+    if isinstance(stmt, (ast.Try, *SCOPE_BOUNDARY)):
+        return []
+    return [stmt]        # simple statements hold no nested statements
+
+
+def walk_own_exprs(stmt: ast.stmt):
+    """Every AST node a statement evaluates itself, nested-scope bodies
+    excluded (a lambda's body runs later, not here)."""
+    for root in own_exprs(stmt):
+        for node in ast.walk(root):
+            if isinstance(node, ast.Lambda):
+                continue
+            yield node
+
+
+class BlockSim:
+    """Branch-aware forward walk over one function scope.
+
+    Subclasses implement ``handle_stmt(stmt)`` (mutating ``self.state``
+    with the statement's own expressions), ``copy_state`` and
+    ``merge_states``.  ``if``/``elif`` arms simulate from copies of the
+    incoming state and merge afterwards, so mutually-exclusive branches
+    never interact; loop bodies simulate once (loop-carried effects are
+    out of static reach).  Nested function/class definitions open their
+    own scope and are skipped — callers check them separately.
+    """
+
+    def handle_stmt(self, stmt: ast.stmt) -> None:
+        raise NotImplementedError
+
+    def copy_state(self):
+        raise NotImplementedError
+
+    def merge_states(self, states) -> None:
+        raise NotImplementedError
+
+    def sim_block(self, stmts) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, SCOPE_BOUNDARY):
+                continue
+            self.handle_stmt(stmt)
+            if isinstance(stmt, ast.If):
+                saved = self.copy_state()
+                self.sim_block(stmt.body)
+                taken = self.copy_state()
+                self.state = saved
+                self.sim_block(stmt.orelse)
+                self.merge_states([taken, self.copy_state()])
+            elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                self.sim_block(stmt.body)
+                self.sim_block(stmt.orelse)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self.sim_block(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self.sim_block(stmt.body)
+                merged = [self.copy_state()]
+                for handler in stmt.handlers:
+                    self.sim_block(handler.body)
+                    merged.append(self.copy_state())
+                self.merge_states(merged)
+                self.sim_block(stmt.orelse)
+                self.sim_block(stmt.finalbody)
+
+    def sim_function(self, fn) -> None:
+        self.sim_block(fn.body)

@@ -1,0 +1,166 @@
+"""Pass ``donation`` — no reads of a donated argument after the call.
+
+``jax.jit(fn, donate_argnums=...)`` invalidates the donated argument
+buffers on every call: reading the old binding afterwards returns garbage
+(or raises on some backends) and, worse, silently breaks bit-identity.
+The convention in this repo is to rebind the donated binding from the
+call's own result in the same statement
+(``..., self.cache = self._step(..., self.cache, ...)``).
+
+Static model (deliberately simple — the fixtures in
+``tests/test_analysis.py`` pin exactly what it catches):
+
+* a *donating callable* is a ``Name`` or ``self.<attr>`` assigned from
+  ``jax.jit(fn, donate_argnums=<constant>)`` anywhere in the module;
+* at each call of a donating callable inside a function, the positional
+  arguments at the donated indices are resolved to bindings (``Name`` or
+  ``self.<attr>``);
+* any Load of such a binding after the donating statement in the same
+  function, with no intervening Store (the call statement's own
+  assignment targets count), is flagged.  Mutually-exclusive ``if``
+  branches are walked separately (:class:`tools.analysis.core.BlockSim`).
+
+Non-constant ``donate_argnums`` and donated callables reached through
+containers (lists of per-stage jits) are out of static reach and skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from tools.analysis.core import (BlockSim, Finding, SourceFile,
+                                 dotted_name, walk_own_exprs)
+
+PASS_ID = "donation"
+DESCRIPTION = "use-after-donation on jax.jit(donate_argnums=...) calls"
+
+_JIT_NAMES = ("jax.jit", "jit")
+
+
+def _binding(node: ast.AST) -> Optional[str]:
+    """A trackable binding: ``x`` -> "x", ``self.x`` -> "self.x"."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return f"self.{node.attr}"
+    return None
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Constant donate_argnums of a jax.jit call, or None."""
+    if dotted_name(call.func) not in _JIT_NAMES:
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for el in v.elts:
+                if not (isinstance(el, ast.Constant)
+                        and isinstance(el.value, int)):
+                    return None            # dynamic element: out of reach
+                out.append(el.value)
+            return tuple(out)
+        return None                        # dynamic donate_argnums
+    return None                            # jit without donation
+
+
+def _collect_donators(tree: ast.AST) -> Dict[str, Tuple[int, ...]]:
+    """binding -> donated positions, for every ``<binding> = jax.jit(...,
+    donate_argnums=<const>)`` in the module."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        pos = _donate_positions(node.value)
+        if pos is None:
+            continue
+        for tgt in node.targets:
+            b = _binding(tgt)
+            if b is not None:
+                out[b] = pos
+    return out
+
+
+class _DonationSim(BlockSim):
+    def __init__(self, donators, sf: SourceFile, findings):
+        self.donators = donators
+        self.sf = sf
+        self.findings = findings
+        # bindings donated and not yet rebound: binding -> donation line
+        self.state: Dict[str, int] = {}
+
+    def copy_state(self):
+        return dict(self.state)
+
+    def merge_states(self, states):
+        merged: Dict[str, int] = {}
+        for s in states:
+            merged.update(s)
+        self.state = merged
+
+    def handle_stmt(self, stmt: ast.stmt) -> None:
+        nodes = list(walk_own_exprs(stmt))
+        live = self.state
+        # donations performed by this statement
+        donated_here = set()
+        for node in nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _binding(node.func)
+            pos = self.donators.get(callee) if callee else None
+            if not pos:
+                continue
+            for i in pos:
+                if i < len(node.args):
+                    b = _binding(node.args[i])
+                    if b is not None:
+                        donated_here.add(b)
+        # 1) loads of still-donated bindings (the donating statement's own
+        #    loads ARE the donation, not a use-after)
+        for node in nodes:
+            if not (isinstance(node, (ast.Name, ast.Attribute))
+                    and isinstance(getattr(node, "ctx", None), ast.Load)):
+                continue
+            b = _binding(node)
+            if b in live and b not in donated_here:
+                self.findings.append(Finding(
+                    PASS_ID, self.sf.path, node.lineno,
+                    f"{b} was donated to a jax.jit(donate_argnums=...) "
+                    f"call on line {live[b]} and is read again without "
+                    f"being rebound"))
+                del live[b]                # one report per donation
+        # 2) rebinds performed by this statement
+        stores = set()
+        for node in nodes:
+            if isinstance(node, (ast.Name, ast.Attribute)) \
+                    and isinstance(getattr(node, "ctx", None),
+                                   (ast.Store, ast.Del)):
+                b = _binding(node)
+                if b is not None:
+                    stores.add(b)
+        for b in stores:
+            live.pop(b, None)
+        # 3) donations that survive the statement (not rebound from the
+        #    call's own result in the same statement)
+        for b in donated_here:
+            if b not in stores:
+                live[b] = stmt.lineno
+
+
+def run(files: Iterable[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in files:
+        donators = _collect_donators(sf.tree)
+        if not donators:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _DonationSim(donators, sf, findings).sim_function(node)
+    return findings

@@ -1,0 +1,81 @@
+"""Pass ``env-knobs`` — every ``REPRO_*`` read goes through the registry.
+
+Flags:
+
+* any direct ``os.environ.get`` / ``os.getenv`` / ``os.environ[...]`` /
+  ``os.environ.setdefault`` access to a ``REPRO_*`` name outside
+  ``src/repro/env.py`` (the registry is the only legal reader — it is
+  where validation and documentation live);
+* ``env.get("REPRO_X")`` calls naming a knob the registry does not
+  declare (would raise ``KeyError`` at runtime; caught here at lint time).
+
+Writes (``os.environ["REPRO_X"] = ...``, ``monkeypatch.setenv``) stay
+legal: that is how tests and tools *configure* knobs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.analysis.core import Finding, SourceFile, dotted_name
+
+PASS_ID = "env-knobs"
+DESCRIPTION = ("direct os.environ reads of REPRO_* names outside the "
+               "repro/env.py registry")
+
+# the one module allowed to touch os.environ for REPRO_* names
+ALLOWED_PATHS = ("src/repro/env.py",)
+
+_ENV_MAPPINGS = ("os.environ", "environ")
+_GETENV_FUNCS = ("os.getenv", "getenv")
+
+
+def _const_repro_name(node: ast.AST):
+    if (isinstance(node, ast.Constant) and isinstance(node.value, str)
+            and node.value.startswith("REPRO_")):
+        return node.value
+    return None
+
+
+def _registered_names():
+    from repro import env
+    return frozenset(env.REGISTRY)
+
+
+def run(files: Iterable[SourceFile]) -> List[Finding]:
+    registered = _registered_names()
+    findings: List[Finding] = []
+    for sf in files:
+        allowed = sf.path in ALLOWED_PATHS
+        for node in ast.walk(sf.tree):
+            hit = None
+            if isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                args = node.args
+                if fn in _GETENV_FUNCS and args:
+                    hit = _const_repro_name(args[0])
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in ("get", "setdefault")
+                      and dotted_name(node.func.value) in _ENV_MAPPINGS
+                      and args):
+                    hit = _const_repro_name(args[0])
+                elif fn is not None and args \
+                        and (fn == "env.get" or fn.endswith(".env.get")):
+                    name = _const_repro_name(args[0])
+                    if name is not None and name not in registered:
+                        findings.append(Finding(
+                            PASS_ID, sf.path, node.lineno,
+                            f"env.get({name!r}): not a registered knob — "
+                            f"declare it in src/repro/env.py"))
+                    continue
+            elif (isinstance(node, ast.Subscript)
+                  and isinstance(node.ctx, ast.Load)
+                  and dotted_name(node.value) in _ENV_MAPPINGS):
+                hit = _const_repro_name(node.slice)
+            if hit is not None and not allowed:
+                findings.append(Finding(
+                    PASS_ID, sf.path, node.lineno,
+                    f"direct os.environ read of {hit}: go through "
+                    f"repro.env.get({hit!r}) (typed, validated, "
+                    f"documented)"))
+    return findings

@@ -1,0 +1,50 @@
+"""Pass ``knob-docs`` — the README env-knob table matches the registry.
+
+The README's "Environment knobs" reference table is generated from
+``repro/env.py`` by ``python -m tools.analysis --knob-table``.  This pass
+re-renders the table from the live registry and diffs it against the text
+between the README's ``knob-table:begin`` / ``knob-table:end`` markers, so
+the docs can never drift from the code: add or change a knob and CI fails
+until the table is regenerated.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+from typing import List
+
+from tools.analysis.core import Finding
+
+PASS_ID = "knob-docs"
+DESCRIPTION = "README env-knob table drifted from the repro/env registry"
+
+README = "README.md"
+BEGIN = "<!-- knob-table:begin -->"
+END = "<!-- knob-table:end -->"
+_BLOCK_RE = re.compile(re.escape(BEGIN) + r"\n(.*?)\n" + re.escape(END),
+                       re.DOTALL)
+
+
+def check_text(readme_text: str, expected_table: str,
+               *, path: str = README) -> List[Finding]:
+    m = _BLOCK_RE.search(readme_text)
+    if m is None:
+        return [Finding(
+            PASS_ID, path, 1,
+            f"README has no {BEGIN} ... {END} block; regenerate it with "
+            f"`python -m tools.analysis --knob-table`")]
+    if m.group(1).strip() != expected_table.strip():
+        line = readme_text[:m.start()].count("\n") + 1
+        return [Finding(
+            PASS_ID, path, line,
+            "README env-knob table drifted from repro/env.py; "
+            "regenerate it with `python -m tools.analysis --knob-table`")]
+    return []
+
+
+def run(root: pathlib.Path) -> List[Finding]:
+    from repro import env
+    readme = root / README
+    if not readme.exists():
+        return [Finding(PASS_ID, README, 1, "README.md not found")]
+    return check_text(readme.read_text(), env.format_knob_table())

@@ -1,0 +1,160 @@
+"""Pass ``prng`` — a PRNG key is consumed at most once per binding.
+
+Bit-identity across engines rests on a disciplined key chain: every
+``jax.random`` key is split (or ``fold_in``-ed) before being consumed
+again, otherwise two samples silently share randomness and the greedy /
+stochastic equivalence grids stop meaning anything.
+
+Static model (per function scope; the self-test fixtures pin behavior):
+
+* *proven* key bindings are names assigned from ``jax.random.PRNGKey`` /
+  ``jax.random.key`` / ``jax.random.split`` / ``jax.random.fold_in``
+  (tuple-unpacked targets included) and constant subscripts of those
+  (``keys[3]``); passing a proven key to ANY call consumes it — handing
+  one key to two sub-init functions is exactly the bug this pass exists
+  to catch;
+* parameters named ``key`` / ``rng`` / ``*_key`` are *assumed* keys: they
+  are consumed only by ``jax.random.*`` calls (so a dict-key parameter
+  that happens to be called ``key`` never false-positives);
+* two consumptions of one binding without an intervening rebind (the
+  conventional ``k, sub = jax.random.split(k)`` rebinds ``k`` in the same
+  statement) are flagged at the second use.  Mutually-exclusive ``if``
+  arms are walked separately (:class:`tools.analysis.core.BlockSim`), so
+  one key consumed once per branch is fine.
+
+Variable subscripts (``keys[i]`` in a loop) and keys flowing through
+containers are out of static reach and skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional
+
+from tools.analysis.core import (BlockSim, Finding, SourceFile,
+                                 dotted_name, walk_own_exprs)
+
+PASS_ID = "prng"
+DESCRIPTION = "jax.random keys consumed more than once without a split"
+
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in"}
+_RANDOM_MODULES = ("random", "jrandom", "jr")
+_KEY_PARAM_NAMES = ("key", "rng")
+
+
+def _call_kind(call: ast.Call) -> str:
+    """"maker" (split/fold_in/PRNGKey), "random" (other jax.random.*), or
+    "other"."""
+    fn = dotted_name(call.func)
+    if fn is None:
+        return "other"
+    parts = fn.split(".")
+    qualified = len(parts) > 1 and parts[-2] in _RANDOM_MODULES
+    if parts[-1] in _KEY_MAKERS and (qualified or len(parts) == 1):
+        return "maker"
+    return "random" if qualified else "other"
+
+
+def _key_binding(node: ast.AST) -> Optional[str]:
+    """Trackable key reference: ``k``, ``self.k``, or ``keys[<const>]``."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return f"self.{node.attr}"
+    if (isinstance(node, ast.Subscript)
+            and isinstance(node.slice, ast.Constant)
+            and isinstance(node.slice.value, int)):
+        base = _key_binding(node.value)
+        if base is not None:
+            return f"{base}[{node.slice.value}]"
+    return None
+
+
+def _target_bindings(tgt: ast.AST) -> List[str]:
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for el in tgt.elts:
+            out.extend(_target_bindings(el))
+        return out
+    b = _key_binding(tgt)
+    return [b] if b is not None else []
+
+
+class _PrngSim(BlockSim):
+    def __init__(self, fn, sf: SourceFile, findings):
+        self.sf = sf
+        self.findings = findings
+        self.proven: set = set()
+        self.assumed: set = set()
+        # binding -> line of last unrefreshed consumption
+        self.state: Dict[str, int] = {}
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = fn.args
+            for a in args.posonlyargs + args.args + args.kwonlyargs:
+                if a.arg in _KEY_PARAM_NAMES or a.arg.endswith("_key"):
+                    self.assumed.add(a.arg)
+
+    def copy_state(self):
+        return dict(self.state)
+
+    def merge_states(self, states):
+        # a key consumed on ANY path is stale afterwards; keep the
+        # earliest line for a stable message
+        merged: Dict[str, int] = {}
+        for s in states:
+            for b, line in s.items():
+                merged[b] = min(merged.get(b, line), line)
+        self.state = merged
+
+    def _is_proven(self, b: str) -> bool:
+        return (b in self.proven
+                or ("[" in b and b.split("[", 1)[0] in self.proven))
+
+    def handle_stmt(self, stmt: ast.stmt) -> None:
+        nodes = list(walk_own_exprs(stmt))
+        used = self.state
+        # 1) consumptions
+        for node in nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _call_kind(node)
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                b = _key_binding(arg)
+                if b is None:
+                    continue
+                consumes = (self._is_proven(b)
+                            or (b in self.assumed and kind != "other"))
+                if not consumes:
+                    continue
+                if b in used:
+                    self.findings.append(Finding(
+                        PASS_ID, self.sf.path, arg.lineno,
+                        f"PRNG key {b} already consumed on line "
+                        f"{used[b]}; split or fold_in before reusing "
+                        f"it"))
+                used[b] = arg.lineno
+        # 2) rebinds refresh the chain; key-maker results are proven keys
+        for node in nodes:
+            if not isinstance(node, ast.Assign):
+                continue
+            fresh = isinstance(node.value, ast.Call) \
+                and _call_kind(node.value) == "maker"
+            for tgt in node.targets:
+                for b in _target_bindings(tgt):
+                    used.pop(b, None)
+                    # rebinding `keys` invalidates stale `keys[i]` uses
+                    for k in [u for u in used
+                              if u.startswith(f"{b}[")]:
+                        used.pop(k)
+                    if fresh:
+                        self.proven.add(b)
+
+
+def run(files: Iterable[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _PrngSim(node, sf, findings).sim_function(node)
+    return findings

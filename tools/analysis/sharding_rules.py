@@ -1,0 +1,143 @@
+"""Pass ``sharding-rules`` — every param/cache leaf has an explicit rule.
+
+``repro/sharding/policy.py`` maps leaf names to PartitionSpecs and falls
+through to replicate-everything for names it does not recognize.  That
+fall-through is how the paged ``pkv`` pool leaf silently replicated under
+TP until PR 4 caught it by hand.  This pass closes the hole structurally:
+
+* the rule vocabulary is extracted from the policy source itself (every
+  string compared against ``name`` inside ``param_pspecs`` /
+  ``cache_pspecs``), so the checker can never drift from the code;
+* every assigned architecture's parameter tree and cache trees (dense AND
+  paged) are built with ``jax.eval_shape`` (nothing is allocated) and each
+  leaf's resolved name must be in the rule vocabulary or explicitly
+  declared default-OK (``policy.PARAM_REPLICATED_OK`` /
+  ``policy.CACHE_REPLICATED_OK``).
+
+A new cache leaf therefore fails CI until it gets a sharding rule or a
+deliberate replicated-OK declaration.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+import pathlib
+from typing import List, Optional, Set
+
+from tools.analysis.core import Finding
+
+PASS_ID = "sharding-rules"
+DESCRIPTION = ("param/cache pytree leaves unmatched by any explicit "
+               "sharding rule")
+
+POLICY_PATH = "src/repro/sharding/policy.py"
+
+
+def extract_rule_names(policy_src: str, fn_name: str) -> Set[str]:
+    """Every string literal compared against ``name`` inside ``fn_name``
+    (``name == "wq"`` / ``name in ("wk", "wv")``) — the rule vocabulary,
+    read from the source of truth."""
+    tree = ast.parse(policy_src)
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.FunctionDef) and node.name == fn_name):
+            continue
+        for n in ast.walk(node):
+            if not (isinstance(n, ast.Compare)
+                    and isinstance(n.left, ast.Name)
+                    and n.left.id == "name"):
+                continue
+            for comp in n.comparators:
+                if isinstance(comp, ast.Constant) \
+                        and isinstance(comp.value, str):
+                    names.add(comp.value)
+                elif isinstance(comp, (ast.Tuple, ast.List, ast.Set)):
+                    for el in comp.elts:
+                        if isinstance(el, ast.Constant) \
+                                and isinstance(el.value, str):
+                            names.add(el.value)
+    return names
+
+
+def _rule_def_line(policy_src: str, fn_name: str) -> int:
+    for node in ast.walk(ast.parse(policy_src)):
+        if isinstance(node, ast.FunctionDef) and node.name == fn_name:
+            return node.lineno
+    return 1
+
+
+def leaf_name(path) -> Optional[str]:
+    """Innermost string key of a pytree path — the same resolution the
+    policy's leaf rules use."""
+    names = [getattr(k, "key", None) for k in path]
+    for k in reversed(names):
+        if isinstance(k, str):
+            return k
+    return None
+
+
+def check_tree(tree, rules: Set[str], default_ok: Set[str],
+               *, kind: str, arch: str, path: str,
+               line: int) -> List[Finding]:
+    """Findings for every leaf of ``tree`` whose name neither matches a
+    rule nor is declared replicate-OK.  Exposed for the self-tests, which
+    feed planted trees."""
+    import jax.tree_util as jtu
+    findings = []
+    seen: Set[str] = set()
+    for leaf_path, _leaf in jtu.tree_leaves_with_path(tree):
+        n = leaf_name(leaf_path)
+        if n in rules or n in default_ok or n in seen:
+            continue
+        seen.add(n)           # one finding per (tree, name)
+        where = jtu.keystr(leaf_path)
+        findings.append(Finding(
+            PASS_ID, path, line,
+            f"{arch}: {kind} leaf {n!r} (first at {where}) matches no "
+            f"explicit sharding rule and is not declared in "
+            f"{'PARAM' if kind == 'params' else 'CACHE'}_REPLICATED_OK "
+            f"— it would silently replicate under TP"))
+    return findings
+
+
+def run(root: pathlib.Path) -> List[Finding]:
+    policy_file = root / POLICY_PATH
+    policy_src = policy_file.read_text()
+    param_rules = extract_rule_names(policy_src, "param_pspecs")
+    cache_rules = extract_rule_names(policy_src, "cache_pspecs")
+    findings: List[Finding] = []
+    if not param_rules or not cache_rules:
+        findings.append(Finding(
+            PASS_ID, POLICY_PATH, 1,
+            "could not extract any leaf-rule names from policy.py — the "
+            "rule extractor no longer matches the code structure"))
+        return findings
+
+    import jax
+    from repro.configs import ASSIGNED
+    from repro.models import stack
+    from repro.sharding import policy
+
+    param_line = _rule_def_line(policy_src, "param_pspecs")
+    cache_line = _rule_def_line(policy_src, "cache_pspecs")
+    for arch in sorted(ASSIGNED):
+        cfg = ASSIGNED[arch]().reduced()
+        pshapes = jax.eval_shape(
+            functools.partial(stack.init_params, cfg),
+            jax.random.PRNGKey(0))
+        findings.extend(check_tree(
+            pshapes, param_rules, policy.PARAM_REPLICATED_OK,
+            kind="params", arch=arch, path=POLICY_PATH, line=param_line))
+        for paged in (False, True):
+            if paged:
+                builder = functools.partial(
+                    stack.init_cache, cfg, 4, 64,
+                    paged_blocks=8, block_size=16)
+            else:
+                builder = functools.partial(stack.init_cache, cfg, 4, 64)
+            cshapes = jax.eval_shape(builder)
+            findings.extend(check_tree(
+                cshapes, cache_rules, policy.CACHE_REPLICATED_OK,
+                kind=f"cache[{'paged' if paged else 'dense'}]",
+                arch=arch, path=POLICY_PATH, line=cache_line))
+    return findings
